@@ -1,0 +1,47 @@
+"""Paper §5 future-work extensions: vertical pod auto-scaling and
+multi-cluster (multi-cloud) federation."""
+from __future__ import annotations
+
+from benchmarks.common import timed
+from repro.core import experiment as ex
+from repro.core.engine import HyperflowEngine
+from repro.core.extensions import (FederatedWorkerPoolExecutor,
+                                   VerticalWorkerPoolExecutor)
+
+
+def run(verbose=False):
+    rows = []
+    # VPA: over-provisioned requests right-sized
+    wf1, wf2 = ex.make_workflow(seed=7, n_tiles=800), ex.make_workflow(
+        seed=7, n_tiles=800)
+    sim1, sim2 = ex.make_sim(seed=7), ex.make_sim(seed=7)
+    (r_plain), us1 = timed(
+        HyperflowEngine(wf1, ex.make_executor("worker_pools"), sim1).run)
+    vpa = VerticalWorkerPoolExecutor(pooled_types=ex.POOLED_TYPES)
+    (r_vpa), us2 = timed(HyperflowEngine(wf2, vpa, sim2).run)
+    peak1 = max(v for _, v in sim1.running_tasks_trace)
+    peak2 = max(v for _, v in sim2.running_tasks_trace)
+    rows += [
+        ("vpa_plain_makespan_s", us1, f"{r_plain.makespan:.0f}"),
+        ("vpa_rightsized_makespan_s", us2, f"{r_vpa.makespan:.0f}"),
+        ("vpa_peak_concurrency_plain", us1, str(peak1)),
+        ("vpa_peak_concurrency_rightsized", us2, str(peak2)),
+        ("vpa_mDiffFit_request", us2,
+         f"{vpa.pools['mDiffFit'].cpu:.2f}"),
+    ]
+    # Federation: two 34-core clouds vs one 68-core cloud
+    wf3 = ex.make_workflow(seed=7, n_tiles=800)
+    sim3 = ex.make_sim(seed=7)
+    n = len(sim3.nodes)
+    fed = FederatedWorkerPoolExecutor(
+        clusters={"A": range(0, n // 2), "B": range(n // 2, n)},
+        transfer_penalty=5.0)
+    (r_fed), us3 = timed(HyperflowEngine(wf3, fed, sim3).run)
+    rows += [
+        ("multicloud_federated_makespan_s", us3, f"{r_fed.makespan:.0f}"),
+        ("multicloud_single_makespan_s", us1, f"{r_plain.makespan:.0f}"),
+        ("multicloud_stolen_tasks", us3, str(fed.stolen)),
+        ("multicloud_overhead_pct", us3,
+         f"{100 * (r_fed.makespan / r_plain.makespan - 1):.1f}"),
+    ]
+    return rows

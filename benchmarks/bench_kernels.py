@@ -1,0 +1,71 @@
+"""Kernel microbenches: XLA blocked flash path wall time (the path the
+dry-run lowers) + Pallas-kernel parity error vs the jnp oracle, + derived
+GFLOP counts. Interpret-mode wall times are NOT perf-meaningful on CPU (the
+kernels target TPU); parity is the point."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Row
+from repro.kernels import ops, ref
+from repro.models.attention import flash_attention as flash_xla
+
+
+def _bench(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run(verbose=False):
+    rows = []
+    B, S, K, G, H = 1, 1024, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, K, G, H), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, K, H), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, K, H), jnp.float32)
+    flops = 4 * B * S * S * K * G * H / 2          # causal
+
+    f = jax.jit(lambda q, k, v: flash_xla(q, k, v, causal=True,
+                                          block_q=256, block_k=256))
+    us = _bench(f, q, k, v)
+    rows.append(("kernel_flash_xla_fwd_1k", us, f"{flops/1e9:.2f}GF"))
+
+    out_k = ops.flash_attention(q, k, v, causal=True, block_q=256,
+                                block_k=256)
+    want = ref.attention_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(out_k - want)))
+    rows.append(("kernel_flash_pallas_parity_maxerr", 0.0, f"{err:.2e}"))
+
+    qd = q[:, :1]
+    us = _bench(jax.jit(lambda q, k, v: ops.flash_decode(q, k, v, S,
+                                                         block_k=256)),
+                qd, k, v)
+    errd = float(jnp.max(jnp.abs(
+        ops.flash_decode(qd, k, v, S, block_k=256)
+        - ref.decode_ref(qd, k, v, S))))
+    rows.append(("kernel_flash_decode_parity_maxerr", us, f"{errd:.2e}"))
+
+    x = jax.random.normal(ks[0], (2048, 1024), jnp.float32)
+    sc = jnp.ones((1024,))
+    err = float(jnp.max(jnp.abs(ops.rmsnorm(x, sc) - ref.rmsnorm_ref(x, sc))))
+    rows.append(("kernel_rmsnorm_parity_maxerr",
+                 _bench(jax.jit(ref.rmsnorm_ref), x, sc), f"{err:.2e}"))
+
+    Bs, Ss, Hs, P, N = 1, 256, 2, 16, 16
+    xs = jax.random.normal(ks[0], (Bs, Ss, Hs, P)) * 0.3
+    a = -jnp.abs(jax.random.normal(ks[1], (Bs, Ss, Hs))) * 0.1
+    Bm = jax.random.normal(ks[2], (Bs, Ss, N)) * 0.3
+    Cm = jax.random.normal(ks[0], (Bs, Ss, N)) * 0.3
+    err = float(jnp.max(jnp.abs(ops.ssd_scan(xs, a, Bm, Cm, chunk=64)
+                                - ref.ssd_ref(xs, a, Bm, Cm))))
+    rows.append(("kernel_ssd_parity_maxerr", 0.0, f"{err:.2e}"))
+    return rows

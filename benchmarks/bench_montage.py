@@ -1,0 +1,100 @@
+"""Paper figures 3-6 + the §4.4 makespan comparison.
+
+One function per paper artifact:
+  fig3_job_model        — job model collapses (small workflow, like the paper)
+  fig4_clustering       — clustered 16k run + utilization trace
+  fig5_clustering_sweep — clustering parameter sweep (no config satisfies)
+  fig6_worker_pools     — worker pools 16k run, full-capacity utilization
+  makespan_table        — pools vs best clustering: the ≈20 % headline
+"""
+from __future__ import annotations
+
+import statistics
+
+from benchmarks.common import Row, ascii_trace, timed
+from repro.core import experiment as ex
+
+SEEDS = (7, 11, 13)
+
+
+def fig3_job_model(verbose=False):
+    (rep, wf, sim), us = timed(ex.run_model, "job", seed=7, n_tiles=400)
+    if verbose:
+        print(ascii_trace(ex.utilization_windows(sim, 50)[:40]))
+    return [("fig3_job_model_small_makespan_s", us,
+             f"{rep.makespan:.0f}"),
+            ("fig3_job_model_small_utilization", us,
+             f"{rep.utilization:.3f}"),
+            ("fig3_job_model_small_pods", us, str(rep.pods_created))]
+
+
+def fig4_clustering(verbose=False):
+    (rep, wf, sim), us = timed(ex.run_model, "clustered", seed=7)
+    if verbose:
+        print(ascii_trace(ex.utilization_windows(sim, 50)))
+    return [("fig4_clustered_16k_makespan_s", us, f"{rep.makespan:.0f}"),
+            ("fig4_clustered_16k_utilization", us,
+             f"{rep.utilization:.3f}"),
+            ("fig4_clustered_16k_pods", us, str(rep.pods_created))]
+
+
+def fig5_clustering_sweep(verbose=False):
+    rows = []
+    sweeps = {
+        "paper_5_20": ex.CLUSTERING_RULES,
+        "small_2_5": {"mProject": {"size": 2, "timeoutMs": 3000},
+                      "mDiffFit": {"size": 5, "timeoutMs": 3000},
+                      "mBackground": {"size": 5, "timeoutMs": 3000}},
+        "large_10_50": {"mProject": {"size": 10, "timeoutMs": 3000},
+                        "mDiffFit": {"size": 50, "timeoutMs": 3000},
+                        "mBackground": {"size": 50, "timeoutMs": 3000}},
+        "huge_20_100": {"mProject": {"size": 20, "timeoutMs": 5000},
+                        "mDiffFit": {"size": 100, "timeoutMs": 5000},
+                        "mBackground": {"size": 100, "timeoutMs": 5000}},
+    }
+    for name, rules in sweeps.items():
+        (rep, _, _), us = timed(ex.run_model, "clustered", seed=7,
+                                rules=rules)
+        rows.append((f"fig5_clustering_{name}_makespan_s", us,
+                     f"{rep.makespan:.0f}"))
+    return rows
+
+
+def fig6_worker_pools(verbose=False):
+    (rep, wf, sim), us = timed(ex.run_model, "worker_pools", seed=7)
+    if verbose:
+        print(ascii_trace(ex.utilization_windows(sim, 50)))
+    return [("fig6_pools_16k_makespan_s", us, f"{rep.makespan:.0f}"),
+            ("fig6_pools_16k_utilization", us, f"{rep.utilization:.3f}"),
+            ("fig6_pools_16k_pods", us, str(rep.pods_created))]
+
+
+def makespan_table(verbose=False):
+    pools, clustered = [], []
+    us_tot = 0.0
+    for s in SEEDS:
+        (rp, _, _), us1 = timed(ex.run_model, "worker_pools", seed=s)
+        (rc, _, _), us2 = timed(ex.run_model, "clustered", seed=s)
+        pools.append(rp.makespan)
+        clustered.append(rc.makespan)
+        us_tot += us1 + us2
+    mp, mc = statistics.mean(pools), statistics.mean(clustered)
+    imp = 100 * (1 - mp / mc)
+    return [
+        ("table_pools_makespan_avg_s", us_tot, f"{mp:.0f}"),
+        ("table_clustered_makespan_avg_s", us_tot, f"{mc:.0f}"),
+        ("table_improvement_pct", us_tot, f"{imp:.1f}"),
+        ("table_paper_pools_s", 0.0, "1420"),
+        ("table_paper_clustered_s", 0.0, "1700"),
+        ("table_paper_improvement_pct", 0.0, "16.5"),
+    ]
+
+
+def run(verbose=False):
+    rows = []
+    rows += fig3_job_model(verbose)
+    rows += fig4_clustering(verbose)
+    rows += fig5_clustering_sweep(verbose)
+    rows += fig6_worker_pools(verbose)
+    rows += makespan_table(verbose)
+    return rows

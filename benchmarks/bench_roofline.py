@@ -1,0 +1,60 @@
+"""§Roofline table: reads the dry-run artifacts and prints per-cell terms.
+Baseline rows for all 40 cells x 2 meshes; the hillclimbed variants carry a
+tag suffix."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(tagged=False):
+    cells = []
+    for f in sorted(ART.glob("*.json")):
+        d = json.loads(f.read_text())
+        is_tagged = bool(d.get("tag"))
+        if is_tagged != tagged:
+            continue
+        cells.append(d)
+    return cells
+
+
+def run(verbose=False):
+    rows = []
+    compiled = skipped = 0
+    worst = (None, 1e9)
+    for d in load_cells():
+        key = f'{d["arch"]}.{d["shape"]}.{d["mesh"]}'
+        if "skipped" in d:
+            skipped += 1
+            rows.append((f"roofline_{key}", 0.0, "SKIP"))
+            continue
+        if "error" in d:
+            rows.append((f"roofline_{key}", 0.0, "ERROR"))
+            continue
+        compiled += 1
+        rf = d["roofline_fraction"]
+        rows.append((
+            f"roofline_{key}", d["compile_seconds"] * 1e6,
+            f"dom={d['dominant']};rf={rf:.3f};"
+            f"c={d['compute_term_kernelized']*1e3:.0f}ms;"
+            f"m={d['memory_term_kernelized']*1e3:.0f}ms;"
+            f"x={d['collective_term_ring']*1e3:.0f}ms"))
+        if d["shape"] != "decode_32k" and d["shape"] != "long_500k" \
+                and rf < worst[1]:
+            worst = (key, rf)
+    rows.append(("roofline_cells_compiled", 0.0, str(compiled)))
+    rows.append(("roofline_cells_skipped_by_design", 0.0, str(skipped)))
+    if worst[0]:
+        rows.append(("roofline_worst_nondecode_cell", 0.0,
+                     f"{worst[0]}:rf={worst[1]:.3f}"))
+    for d in load_cells(tagged=True):
+        key = f'{d["arch"]}.{d["shape"]}.{d["mesh"]}.{d["tag"]}'
+        rows.append((
+            f"perf_{key}", d["compile_seconds"] * 1e6,
+            f"dom={d['dominant']};rf={d['roofline_fraction']:.3f};"
+            f"c={d['compute_term_kernelized']*1e3:.0f}ms;"
+            f"m={d['memory_term_kernelized']*1e3:.0f}ms;"
+            f"x={d['collective_term_ring']*1e3:.0f}ms"))
+    return rows

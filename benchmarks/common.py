@@ -1,0 +1,26 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]     # (name, us_per_call, derived)
+
+
+def emit(rows: List[Row]):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def ascii_trace(windows, width: int = 60, height_cap: float = 1.0) -> str:
+    out = []
+    for t, u in windows:
+        bar = "#" * int(min(u, height_cap) / height_cap * width)
+        out.append(f"{t:7.0f}s |{bar:<{width}s}| {u:4.2f}")
+    return "\n".join(out)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

@@ -1,0 +1,44 @@
+"""Benchmark harness — one module per paper table/figure + the beyond-paper
+ML-fleet, kernel-parity, and roofline benches. Prints ``name,us_per_call,
+derived`` CSV rows (derived carries the figure-of-merit)."""
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: montage,ml_pools,kernels,roofline")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (bench_extensions, bench_kernels,
+                            bench_ml_pools, bench_montage, bench_roofline)
+    benches = {
+        "montage": bench_montage.run,
+        "ml_pools": bench_ml_pools.run,
+        "kernels": bench_kernels.run,
+        "roofline": bench_roofline.run,
+        "extensions": bench_extensions.run,
+    }
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            emit(fn(verbose=args.verbose))
+        except Exception:
+            failed += 1
+            print(f"{name},0,BENCH_FAILED", file=sys.stdout)
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

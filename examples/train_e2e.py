@@ -1,0 +1,79 @@
+"""End-to-end training driver: a ~small-but-real LM trained for a few
+hundred steps with the full production substrate — sharded-ready step
+builders, AdamW, deterministic pipeline, async checkpointing, fault
+injection + restart, straggler monitoring.
+
+Default is a ~1M-param xLSTM (CPU-friendly); --mid trains a ~25M model.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 200
+    PYTHONPATH=src python examples/train_e2e.py --steps 200 --fault-at 80
+"""
+import argparse
+import dataclasses
+import shutil
+import time
+
+import jax
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.data import make_batch_fn
+from repro.engine.fault_tolerance import FaultInjector, TrainSupervisor
+from repro.models import build_model, count_params
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--mid", action="store_true", help="~25M params")
+    ap.add_argument("--fault-at", type=int, nargs="*", default=[])
+    ap.add_argument("--ckpt", default="/tmp/repro_train_e2e")
+    args = ap.parse_args()
+
+    cfg = get_arch("xlstm-125m").reduced()
+    if args.mid:
+        cfg = dataclasses.replace(cfg, d_model=256, num_layers=6,
+                                  vocab_size=8192, name="xlstm-mid")
+    model = build_model(cfg)
+    print(f"training {cfg.name}: {count_params(cfg):,} params, "
+          f"{args.steps} steps")
+    shape = ShapeConfig("e2e", seq_len=64, global_batch=16, kind="train")
+    batch_fn = make_batch_fn(cfg, shape, seed=0)
+    opt = AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)
+
+    @jax.jit
+    def train_step(state, batch):
+        (loss, m), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state["params"], batch)
+        p, o, stats = adamw_update(state["params"], grads,
+                                   {k: state[k] for k in ("m", "v", "step")},
+                                   opt)
+        return {"params": p, **o}, {"loss": loss, **stats}
+
+    def make_state():
+        params = model.init(jax.random.PRNGKey(0))
+        return {"params": params, **adamw_init(params, opt)}
+
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+    sup = TrainSupervisor(
+        args.ckpt, make_state,
+        lambda s, i: train_step(s, batch_fn(i)),
+        every=40,
+        injector=FaultInjector(tuple(args.fault_at)) if args.fault_at
+        else None)
+    t0 = time.time()
+    state, log, restarts = sup.run(args.steps)
+    for s, m in log:
+        if s % 25 == 0 or s == args.steps:
+            print(f"step {s:4d}  loss={float(m['loss']):.4f}  "
+                  f"lr={float(m['lr']):.2e}")
+    first, last = float(log[0][1]["loss"]), float(log[-1][1]["loss"])
+    med = sup.monitor.median()
+    print(f"\nloss {first:.3f} -> {last:.3f}; {restarts} restart(s); "
+          f"median step {med*1e3:.0f}ms; wall {time.time()-t0:.0f}s")
+    assert last < first, "loss must improve"
+
+
+if __name__ == "__main__":
+    main()

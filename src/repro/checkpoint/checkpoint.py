@@ -1,0 +1,181 @@
+"""Checkpointing: per-leaf .npy shards + JSON manifest, async writer thread,
+elastic restore (any mesh — shardings are applied at load via device_put).
+
+Layout:
+    <dir>/step_000120/
+        manifest.json            # pytree structure + leaf paths + dtypes
+        <flat-key>.npy           # one file per leaf
+        _COMMITTED               # written last — incomplete dirs are ignored
+
+The writer gathers to host (np.asarray) then hands the file I/O to a
+background thread; ``wait()`` blocks (used before process exit and in
+tests). Restore reads into host arrays and (optionally) device_puts with the
+target sharding pytree — which is how elastic up/down-scaling reshapes a
+run: the same checkpoint restores onto any mesh.
+"""
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import os
+import re
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+Pytree = Any
+_SEP = "::"
+
+
+def _flatten(tree: Pytree) -> Dict[str, Any]:
+    flat = {}
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                rec(node[k], path + (str(k),))
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                rec(v, path + (str(i),))
+        else:
+            flat[_SEP.join(path)] = node
+    rec(tree, ())
+    return flat
+
+
+def _unflatten_into(template: Pytree, flat: Dict[str, Any]) -> Pytree:
+    def rec(node, path):
+        if isinstance(node, dict):
+            return {k: rec(v, path + (str(k),)) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            t = [rec(v, path + (str(i),)) for i, v in enumerate(node)]
+            return type(node)(t)
+        return flat[_SEP.join(path)]
+    return rec(template, ())
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Pytree,
+         blocking: bool = True) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    out = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f".tmp_step_{step:08d}_{os.getpid()}_{threading.get_ident()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat = _flatten(tree)
+    host, dtypes = {}, {}
+    for k, v in flat.items():
+        dt = str(jnp.asarray(v).dtype) if not isinstance(v, np.ndarray) \
+            else str(v.dtype)
+        dtypes[k] = dt
+        a = np.asarray(v, np.float32) if dt == "bfloat16" else np.asarray(v)
+        host[k] = a
+
+    def write():
+        manifest = {}
+        for k, v in host.items():
+            fn = re.sub(r"[^\w.\-]", "_", k) + ".npy"
+            np.save(tmp / fn, v)
+            manifest[k] = {"file": fn, "dtype": dtypes[k],
+                           "shape": list(v.shape)}
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        (tmp / "_COMMITTED").write_text("ok")
+        if out.exists():            # concurrent writer won the race — fine
+            shutil.rmtree(tmp)
+            return
+        try:
+            os.rename(tmp, out)
+        except OSError:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+    if blocking:
+        write()
+        return out
+    t = threading.Thread(target=write, daemon=True)
+    t.start()
+    return out
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for p in ckpt_dir.iterdir():
+        m = re.fullmatch(r"step_(\d+)", p.name)
+        if m and (p / "_COMMITTED").exists():
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, step: int, template: Pytree,
+            shardings: Optional[Pytree] = None) -> Pytree:
+    """Restore into the structure of ``template``; device_put with
+    ``shardings`` (same structure) if given — this is the elastic-resharding
+    path: any mesh may load any checkpoint."""
+    src = Path(ckpt_dir) / f"step_{step:08d}"
+    manifest = json.loads((src / "manifest.json").read_text())
+    flat_t = _flatten(template)
+    flat = {}
+    for k in flat_t:
+        meta = manifest[k]
+        a = np.load(src / meta["file"])
+        if meta["dtype"] == "bfloat16":
+            a = jnp.asarray(a, jnp.bfloat16)
+        flat[k] = a
+    tree = _unflatten_into(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree,
+                            shardings)
+    return tree
+
+
+class CheckpointManager:
+    """Async rolling checkpointer with a retention budget."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3,
+                 every: int = 50):
+        self.dir = Path(ckpt_dir)
+        self.keep = keep
+        self.every = every
+        self._threads = []
+        self._saved_steps = set()
+
+    def maybe_save(self, step: int, tree: Pytree, force: bool = False):
+        if not force and (self.every <= 0 or step % self.every != 0):
+            return False
+        if step in self._saved_steps:
+            return False
+        self._saved_steps.add(step)
+        flat = _flatten(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+
+        def write():
+            save(self.dir, step, host, blocking=True)
+            self._gc()
+
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        self._threads.append(t)
+        return True
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1)) for p in self.dir.iterdir()
+            if (m := re.fullmatch(r"step_(\d+)", p.name))
+            and (p / "_COMMITTED").exists())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    def wait(self):
+        for t in self._threads:
+            t.join()
+        self._threads = []
+
+    def latest(self) -> Optional[int]:
+        return latest_step(self.dir)

@@ -1,0 +1,29 @@
+"""Assigned architecture registry: ``get_arch(name)`` / ``ARCHS``."""
+from repro.configs.base import (ArchConfig, MoEConfig, SSMConfig, ShapeConfig,
+                                SHAPES, TRAIN_4K, PREFILL_32K, DECODE_32K,
+                                LONG_500K, shape_applicable)
+from repro.configs.starcoder2_7b import CONFIG as starcoder2_7b
+from repro.configs.chatglm3_6b import CONFIG as chatglm3_6b
+from repro.configs.llama3_2_3b import CONFIG as llama3_2_3b
+from repro.configs.llama3_405b import CONFIG as llama3_405b
+from repro.configs.whisper_base import CONFIG as whisper_base
+from repro.configs.mixtral_8x7b import CONFIG as mixtral_8x7b
+from repro.configs.granite_moe_1b import CONFIG as granite_moe_1b
+from repro.configs.internvl2_26b import CONFIG as internvl2_26b
+from repro.configs.xlstm_125m import CONFIG as xlstm_125m
+from repro.configs.zamba2_7b import CONFIG as zamba2_7b
+
+ARCHS = {c.name: c for c in (
+    starcoder2_7b, chatglm3_6b, llama3_2_3b, llama3_405b, whisper_base,
+    mixtral_8x7b, granite_moe_1b, internvl2_26b, xlstm_125m, zamba2_7b)}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+__all__ = ["ArchConfig", "MoEConfig", "SSMConfig", "ShapeConfig", "SHAPES",
+           "TRAIN_4K", "PREFILL_32K", "DECODE_32K", "LONG_500K",
+           "shape_applicable", "ARCHS", "get_arch"]

@@ -1,0 +1,157 @@
+"""Architecture and shape configuration system.
+
+Every assigned architecture is a frozen ``ArchConfig``; input shapes are
+``ShapeConfig``s. ``reduced()`` produces the tiny CPU-smoke variant of any
+arch, preserving the family-specific structure (MoE stays MoE, hybrid stays
+hybrid) while shrinking width/depth/vocab.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 (SSD) block hyper-params."""
+    state_dim: int = 64          # N
+    head_dim: int = 64           # P
+    num_heads: int = 0           # derived if 0: d_inner // head_dim
+    expand: int = 2              # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # derived if 0: d_model // num_heads
+    # --- attention flavour ---
+    rope: str = "full"           # full | half (chatglm 2d) | none (learned pos)
+    sliding_window: int = 0      # 0 = full attention
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    mlp: str = "swiglu"          # swiglu | gelu
+    logit_softcap: float = 0.0
+    tie_embeddings: bool = False
+    max_position_embeddings: int = 0   # only for learned-pos archs
+    # --- family extensions ---
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    slstm_at: Tuple[int, ...] = ()         # xlstm: which blocks are sLSTM
+    shared_attn_period: int = 0            # zamba2: shared attn every N slots
+    encoder_layers: int = 0                # whisper: encoder depth
+    encoder_seq: int = 0                   # whisper: # frame embeddings
+    num_image_tokens: int = 0              # vlm: stubbed patch-embedding count
+    # --- numerics ---
+    dtype: str = "bfloat16"                # activation/compute dtype
+    param_dtype: str = "bfloat16"
+    opt_dtype: str = "float32"             # AdamW m/v dtype
+    remat: bool = True
+    # --- capability flags ---
+    subquadratic: bool = False             # eligible for long_500k decode
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.num_heads)
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.family == "audio"
+
+    def moe_inactive_ff_params(self) -> int:
+        """Expert-FF params NOT active per token (for 6·N_active·D).
+
+        Exact total param counts come from the abstract param pytree
+        (``models.model.count_params``); this only supplies the MoE
+        active/total correction, which is analytic by construction.
+        """
+        if not self.moe:
+            return 0
+        per_expert = 3 * self.d_model * self.d_ff
+        return int(self.num_layers * per_expert
+                   * (self.moe.num_experts - self.moe.top_k))
+
+    def n_shared_applications(self) -> int:
+        if not self.shared_attn_period:
+            return 0
+        return self.num_layers // self.shared_attn_period
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family variant for CPU smoke tests."""
+        small_moe = MoEConfig(4, min(self.moe.top_k, 2)) if self.moe else None
+        small_ssm = dataclasses.replace(
+            self.ssm, state_dim=16, head_dim=16, chunk=16) if self.ssm else None
+        return dataclasses.replace(
+            self,
+            name=self.name + "-reduced",
+            num_layers=max(2, self.shared_attn_period + 1) if self.shared_attn_period else 2,
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2),
+            head_dim=16,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            sliding_window=min(self.sliding_window, 8) if self.sliding_window else 0,
+            max_position_embeddings=min(self.max_position_embeddings, 128)
+            if self.max_position_embeddings else 0,
+            moe=small_moe,
+            ssm=small_ssm,
+            slstm_at=tuple(i for i in self.slstm_at if i < 2) or ((1,) if self.slstm_at else ()),
+            shared_attn_period=min(self.shared_attn_period, 2) if self.shared_attn_period else 0,
+            encoder_layers=min(self.encoder_layers, 2) if self.encoder_layers else 0,
+            encoder_seq=min(self.encoder_seq, 16) if self.encoder_seq else 0,
+            num_image_tokens=min(self.num_image_tokens, 4) if self.num_image_tokens else 0,
+            dtype="float32",
+            param_dtype="float32",
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+    microbatch: int = 0          # train: grad-accum microbatch (0 = no accum)
+
+    def with_microbatch(self, mb: int) -> "ShapeConfig":
+        return dataclasses.replace(self, microbatch=mb)
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (see DESIGN §Arch-applicability)."""
+    if shape.name == "long_500k" and not arch.subquadratic:
+        return False, "pure full-attention arch: 500k dense KV decode skipped"
+    return True, ""

@@ -1,0 +1,16 @@
+"""ChatGLM3-6B [arXiv:2406.12793; hf] — GQA kv=2, 2d RoPE (half dims), SwiGLU."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="chatglm3-6b",
+    family="dense",
+    num_layers=28,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    d_ff=13696,
+    vocab_size=65024,
+    rope="half",           # GLM applies rotary to half the head dims
+    norm="rmsnorm",
+    mlp="swiglu",
+)

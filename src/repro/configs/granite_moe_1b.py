@@ -1,0 +1,21 @@
+"""Granite-3.0-1B-A400M [hf:ibm-granite/granite-3.0-1b-a400m-base; hf].
+
+MoE 32 experts top-8, narrow d_ff=512 experts.
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-1b-a400m",
+    family="moe",
+    num_layers=24,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    rope="full",
+    norm="rmsnorm",
+    mlp="swiglu",
+    moe=MoEConfig(num_experts=32, top_k=8),
+    tie_embeddings=True,
+)

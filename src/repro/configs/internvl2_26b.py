@@ -1,0 +1,23 @@
+"""InternVL2-26B [arXiv:2404.16821; hf] — VLM: InternViT frontend STUB.
+
+Backbone-only per the assignment: the vision tower is stubbed; ``input_specs``
+provides precomputed patch embeddings (B, num_image_tokens, d_model) that the
+model overlays on the first ``num_image_tokens`` positions of the token
+embedding sequence (LLaVA-style prefix).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-26b",
+    family="vlm",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    rope="full",
+    norm="rmsnorm",
+    mlp="swiglu",
+    num_image_tokens=256,
+)

@@ -1,0 +1,22 @@
+"""Llama-3-405B [arXiv:2407.21783; unverified] — 126L GQA kv=8, 128k vocab.
+
+Memory note (v5e, 16 GB HBM): full train state needs bf16 AdamW moments
+(8 B/param fully sharded = 12.7 GB/chip on a 256-chip pod) — set via
+``opt_dtype``. fp32 moments fit only on the 512-chip multi-pod mesh.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3-405b",
+    family="dense",
+    num_layers=126,
+    d_model=16384,
+    num_heads=128,
+    num_kv_heads=8,
+    d_ff=53248,
+    vocab_size=128256,
+    rope="full",
+    norm="rmsnorm",
+    mlp="swiglu",
+    opt_dtype="bfloat16",
+)

@@ -1,0 +1,23 @@
+"""Mixtral-8x7B [arXiv:2401.04088; hf] — MoE 8 experts top-2, SWA(4096).
+
+Sliding-window attention bounds the KV cache, making the arch sub-quadratic
+in context length => eligible for the long_500k decode cell.
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    rope="full",
+    sliding_window=4096,
+    norm="rmsnorm",
+    mlp="swiglu",
+    moe=MoEConfig(num_experts=8, top_k=2),
+    subquadratic=True,            # via SWA-bounded KV cache
+)

@@ -1,0 +1,24 @@
+"""Whisper-base [arXiv:2212.04356; unverified] — enc-dec, conv frontend STUB.
+
+The audio conv frontend is stubbed per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, encoder_seq, d_model). Attention is
+MHA (kv=8 == heads), learned positions (rope="none").
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,                 # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    rope="none",
+    norm="layernorm",
+    mlp="gelu",
+    max_position_embeddings=32768,   # stretched for the decode_32k cell
+    encoder_layers=6,
+    encoder_seq=1500,
+)

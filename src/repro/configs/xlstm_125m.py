@@ -1,0 +1,23 @@
+"""xLSTM-125M [arXiv:2405.04517; unverified] — sLSTM + mLSTM blocks (7:1-ish).
+
+d_ff=0: xLSTM blocks carry their own projections (mLSTM: up-projection 2x with
+conv + matrix-memory cell; sLSTM: post-up-projection 4/3 gated FF). Recurrent
+state instead of a KV cache => sub-quadratic, runs the long_500k cell.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    rope="none",
+    norm="layernorm",
+    slstm_at=(1, 7),
+    tie_embeddings=True,
+    subquadratic=True,
+)

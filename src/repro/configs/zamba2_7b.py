@@ -1,0 +1,25 @@
+"""Zamba2-7B [arXiv:2411.15242; unverified] — Mamba2 backbone + shared attn.
+
+81 layer slots; every 6th slot applies ONE shared (weight-tied) transformer
+block (attention + MLP), the rest are Mamba2 (SSD) blocks with state_dim=64.
+SSM state + a handful of shared-attn KV caches => sub-quadratic, runs
+long_500k.
+"""
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    rope="full",
+    norm="rmsnorm",
+    mlp="swiglu",
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4, chunk=128),
+    shared_attn_period=6,
+    subquadratic=True,
+)

@@ -1,0 +1,14 @@
+"""Layer A — the paper's contribution: HyperFlow-style workflow engine,
+Kubernetes cluster simulator, and the three execution models
+(job / job+clustering / worker-pools with proportional auto-scaling)."""
+from repro.core.workflow import Task, Workflow
+from repro.core.montage import montage, montage_small
+from repro.core.cluster import ClusterSim
+from repro.core.engine import HyperflowEngine, RunReport
+from repro.core.exec_models import (JobExecutor, ClusteredExecutor,
+                                    WorkerPoolExecutor)
+from repro.core.autoscaler import proportional_replicas
+
+__all__ = ["Task", "Workflow", "montage", "montage_small", "ClusterSim",
+           "HyperflowEngine", "RunReport", "JobExecutor", "ClusteredExecutor",
+           "WorkerPoolExecutor", "proportional_replicas"]

@@ -1,0 +1,57 @@
+"""KEDA/HPA-style autoscaler with workload-proportional resource allocation.
+
+Implements the paper's §3.5 scaling rule: the desired replica count of each
+competing worker pool is computed so that cluster resources are allocated
+proportionally to each pool's current workload (queue length x per-task CPU
+request), subject to the cluster quota; pools with empty queues scale to
+zero (KEDA), which plain HPA cannot do.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Mapping
+
+HPA_SYNC_PERIOD = 15.0            # Kubernetes HPA default sync period
+SCALE_DOWN_STABILIZATION = 30.0   # KEDA cooldown before releasing workers
+
+
+def proportional_replicas(demand: Mapping[str, float],
+                          cpu_request: Mapping[str, float],
+                          quota_cores: float,
+                          min_share: float = 0.0) -> Dict[str, int]:
+    """Compute desired replicas per pool.
+
+    demand[p]: outstanding work for pool p, in tasks (queued + in-flight).
+    cpu_request[p]: cores per worker replica of pool p.
+    quota_cores: total cores the pools may occupy.
+
+    If total demand fits in the quota every pool gets ceil(demand) replicas;
+    otherwise the quota is split proportionally to core-demand (the paper's
+    proportional-allocation requirement), largest-remainder rounded so the
+    quota is used fully but never exceeded.
+    """
+    want_cores = {p: demand[p] * cpu_request[p] for p in demand}
+    total = sum(want_cores.values())
+    if total <= 0:
+        return {p: 0 for p in demand}
+    if total <= quota_cores:
+        return {p: int(math.ceil(demand[p])) for p in demand}
+    shares = {p: quota_cores * want_cores[p] / total for p in demand}
+    # at least min_share cores for any pool with demand (avoid starvation)
+    if min_share:
+        for p in shares:
+            if demand[p] > 0:
+                shares[p] = max(shares[p], min_share)
+    # largest-remainder rounding in units of replicas
+    repl = {p: int(shares[p] / cpu_request[p]) for p in demand}
+    used = sum(repl[p] * cpu_request[p] for p in demand)
+    rema = sorted(demand, key=lambda p: (shares[p] / cpu_request[p]) % 1.0,
+                  reverse=True)
+    for p in rema:
+        if used + cpu_request[p] <= quota_cores and repl[p] < demand[p]:
+            repl[p] += 1
+            used += cpu_request[p]
+    # never exceed what the pool can use
+    for p in repl:
+        repl[p] = min(repl[p], int(math.ceil(demand[p])))
+    return repl

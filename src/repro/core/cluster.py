@@ -1,0 +1,230 @@
+"""Deterministic discrete-event Kubernetes cluster simulator.
+
+Models the control-plane behaviours the paper measures:
+  * Pod creation latency (~2 s container start, paper §4.2),
+  * scheduler retry with exponential back-off for Pending pods
+    (initial 10 s, x2, cap 300 s — "up to several minutes", §4.2),
+  * API-server/scheduler throughput limits (attempts per cycle), which
+    overload under thousands of concurrently-requested pods,
+  * resource-request-based first-fit placement (CPU + memory),
+  * immediate resource release on pod termination.
+
+The key asymmetry the paper exploits: freed capacity is only picked up by a
+Pending pod when *its* back-off timer expires — long-lived worker-pool pods
+never pay that price after the initial scale-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import random
+from typing import Callable, Dict, List, Optional
+
+POD_STARTUP = 2.0
+BACKOFF_INITIAL = 10.0
+BACKOFF_FACTOR = 2.0
+BACKOFF_MAX = 300.0
+SCHED_INTERVAL = 1.0
+SCHED_ATTEMPTS_PER_CYCLE = 100     # scheduler throughput bound
+
+
+@dataclasses.dataclass
+class Node:
+    id: int
+    cpu: float
+    mem: float
+    used_cpu: float = 0.0
+    used_mem: float = 0.0
+
+    def fits(self, cpu: float, mem: float) -> bool:
+        return (self.used_cpu + cpu <= self.cpu + 1e-9
+                and self.used_mem + mem <= self.mem + 1e-9)
+
+
+@dataclasses.dataclass
+class Pod:
+    id: int
+    name: str
+    cpu: float
+    mem: float
+    on_started: Optional[Callable] = None   # fn(sim, pod)
+    node: Optional[int] = None
+    state: str = "pending"                  # pending|starting|running|done
+    submitted_at: float = 0.0
+    started_at: Optional[float] = None
+    backoff: float = BACKOFF_INITIAL
+    next_attempt: float = 0.0
+    busy: bool = False                      # executing a task right now
+
+
+class ClusterSim:
+    def __init__(self, n_nodes: int = 17, node_cpu: float = 4.0,
+                 node_mem: float = 16384.0, seed: int = 0,
+                 pod_startup: float = POD_STARTUP,
+                 sched_interval: float = SCHED_INTERVAL,
+                 attempts_per_cycle: int = SCHED_ATTEMPTS_PER_CYCLE,
+                 backoff_initial: float = BACKOFF_INITIAL,
+                 backoff_max: float = BACKOFF_MAX):
+        self.nodes = [Node(i, node_cpu, node_mem) for i in range(n_nodes)]
+        self.t = 0.0
+        self.rng = random.Random(seed)
+        self.pod_startup = pod_startup
+        self.sched_interval = sched_interval
+        self.attempts_per_cycle = attempts_per_cycle
+        self.backoff_initial = backoff_initial
+        self.backoff_max = backoff_max
+        self._heap: List = []
+        self._seq = itertools.count()
+        self._pod_ids = itertools.count()
+        self.pods: Dict[int, Pod] = {}
+        self.pending: List[int] = []
+        self.pods_created = 0
+        self.sched_cycles = 0
+        self.sched_attempts = 0
+        # metrics: step functions over time
+        self.busy_cores_trace: List = [(0.0, 0.0)]
+        self.running_tasks_trace: List = [(0.0, 0)]
+        self.pending_trace: List = [(0.0, 0)]
+        self._busy_cores = 0.0
+        self._running_tasks = 0
+        self._sched_timer_set = False
+
+    # ------------------------------------------------------------ events --
+    def schedule(self, delay: float, fn: Callable, *args):
+        heapq.heappush(self._heap, (self.t + delay, next(self._seq), fn, args))
+
+    def _record(self):
+        self.busy_cores_trace.append((self.t, self._busy_cores))
+        self.running_tasks_trace.append((self.t, self._running_tasks))
+        self.pending_trace.append((self.t, len(self.pending)))
+
+    def capacity_cores(self) -> float:
+        return sum(n.cpu for n in self.nodes)
+
+    def free_cores(self) -> float:
+        return sum(n.cpu - n.used_cpu for n in self.nodes)
+
+    # -------------------------------------------------------------- pods --
+    def submit_pod(self, name: str, cpu: float, mem: float,
+                   on_started: Callable) -> Pod:
+        pod = Pod(next(self._pod_ids), name, cpu, mem, on_started,
+                  submitted_at=self.t, next_attempt=self.t,
+                  backoff=self.backoff_initial)
+        self.pods[pod.id] = pod
+        self.pending.append(pod.id)
+        self.pods_created += 1
+        self._ensure_sched_timer()
+        self._record()
+        return pod
+
+    def delete_pod(self, pod_id: int):
+        pod = self.pods.get(pod_id)
+        if pod is None or pod.state == "done":
+            return
+        if pod.state in ("starting", "running") and pod.node is not None:
+            node = self.nodes[pod.node]
+            node.used_cpu -= pod.cpu
+            node.used_mem -= pod.mem
+        if pod.state == "pending" and pod.id in self.pending:
+            self.pending.remove(pod.id)
+        pod.state = "done"
+        self._record()
+
+    def task_started(self, cores: float):
+        self._busy_cores += cores
+        self._running_tasks += 1
+        self._record()
+
+    def task_finished(self, cores: float):
+        self._busy_cores -= cores
+        self._running_tasks -= 1
+        self._record()
+
+    # --------------------------------------------------------- scheduler --
+    def _ensure_sched_timer(self):
+        if not self._sched_timer_set:
+            self._sched_timer_set = True
+            self.schedule(self.sched_interval, self._sched_cycle)
+
+    def _sched_cycle(self):
+        self._sched_timer_set = False
+        self.sched_cycles += 1
+        attempts = 0
+        still: List[int] = []
+        # FIFO over pods whose back-off has expired; bounded throughput
+        for pid in self.pending:
+            pod = self.pods[pid]
+            if pod.state != "pending":
+                continue
+            if pod.next_attempt > self.t or attempts >= self.attempts_per_cycle:
+                still.append(pid)
+                continue
+            attempts += 1
+            node = self._first_fit(pod)
+            if node is None:
+                pod.backoff = min(pod.backoff * BACKOFF_FACTOR,
+                                  self.backoff_max)
+                pod.next_attempt = self.t + pod.backoff * self.rng.uniform(0.9, 1.1)
+                still.append(pid)
+            else:
+                node.used_cpu += pod.cpu
+                node.used_mem += pod.mem
+                pod.node = node.id
+                pod.state = "starting"
+                self.schedule(self.pod_startup, self._pod_started, pod.id)
+        self.sched_attempts += attempts
+        self.pending = still
+        self._record()
+        if self.pending:
+            self._ensure_sched_timer()
+
+    def _first_fit(self, pod: Pod) -> Optional[Node]:
+        allowed = getattr(pod, "allowed_nodes", None)
+        for node in self.nodes:
+            if allowed is not None and node.id not in allowed:
+                continue
+            if node.fits(pod.cpu, pod.mem):
+                return node
+        return None
+
+    def _pod_started(self, pod_id: int):
+        pod = self.pods[pod_id]
+        if pod.state != "starting":
+            return
+        pod.state = "running"
+        pod.started_at = self.t
+        if pod.on_started:
+            pod.on_started(self, pod)
+
+    # --------------------------------------------------------------- run --
+    def run(self, until: Optional[float] = None,
+            stop_when: Optional[Callable[[], bool]] = None,
+            max_events: int = 50_000_000):
+        events = 0
+        while self._heap:
+            if stop_when and stop_when():
+                break
+            t, _, fn, args = heapq.heappop(self._heap)
+            if until is not None and t > until:
+                self.t = until
+                break
+            self.t = t
+            fn(*args)
+            events += 1
+            if events >= max_events:
+                raise RuntimeError("simulator event budget exceeded")
+        return self.t
+
+    # ------------------------------------------------------------ report --
+    def utilization(self, t_end: Optional[float] = None) -> float:
+        """Time-averaged busy-cores / capacity over [0, t_end]."""
+        trace = self.busy_cores_trace
+        t_end = t_end if t_end is not None else self.t
+        if t_end <= 0:
+            return 0.0
+        area = 0.0
+        for (t0, v), (t1, _) in zip(trace, trace[1:]):
+            area += v * (min(t1, t_end) - min(t0, t_end))
+        area += trace[-1][1] * max(0.0, t_end - trace[-1][0])
+        return area / (self.capacity_cores() * t_end)

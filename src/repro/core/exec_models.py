@@ -1,0 +1,299 @@
+"""The paper's three execution models for scientific workflows on Kubernetes.
+
+1. JobExecutor        — one Kubernetes Job (one Pod) per task (§3.2).
+2. ClusteredExecutor  — job model + horizontal task clustering: batches of
+                        `size` same-type tasks run sequentially in one Pod,
+                        flushed after `timeout_ms` if incomplete (§3.5).
+3. WorkerPoolExecutor — the paper's contribution (§3.3): one auto-scalable
+                        worker pool (deployment + queue) per task type, with
+                        queue-length-driven, workload-proportional scaling
+                        and KEDA scale-to-zero. A *hybrid* mode (used in the
+                        paper's §4.4 evaluation) runs only the parallel-stage
+                        task types in pools and everything else as jobs.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Deque, Dict, List, Optional, Sequence
+
+from repro.core.autoscaler import (HPA_SYNC_PERIOD, SCALE_DOWN_STABILIZATION,
+                                   proportional_replicas)
+from repro.core.cluster import ClusterSim, Pod
+from repro.core.workflow import Task
+
+
+class JobExecutor:
+    """Each task -> one Job -> one Pod (created, runs task, destroyed)."""
+
+    def __init__(self):
+        self.engine = None
+        self.sim: Optional[ClusterSim] = None
+
+    def bind(self, engine, sim: ClusterSim):
+        self.engine, self.sim = engine, sim
+
+    def submit(self, task: Task):
+        def on_started(sim: ClusterSim, pod: Pod):
+            task.started_at = sim.t
+            sim.task_started(task.cpu)
+
+            def complete():
+                sim.task_finished(task.cpu)
+                sim.delete_pod(pod.id)
+                self.engine.on_task_done(task)
+
+            sim.schedule(task.duration, complete)
+
+        self.sim.submit_pod(f"job-{task.type}-{task.id}", task.cpu, task.mem,
+                            on_started)
+
+
+class ClusteredExecutor:
+    """Job model with horizontal task clustering (same-type, sequential)."""
+
+    def __init__(self, rules: Dict[str, dict] | None = None,
+                 default_size: int = 1, default_timeout_ms: float = 3000.0):
+        # rules: {taskType: {"size": int, "timeoutMs": float}} — mirrors the
+        # HyperFlow agglomeration config file shown in the paper.
+        self.rules = rules or {}
+        self.default_size = default_size
+        self.default_timeout_ms = default_timeout_ms
+        self.buffers: Dict[str, List[Task]] = collections.defaultdict(list)
+        self.flush_deadline: Dict[str, float] = {}
+        self.engine = None
+        self.sim: Optional[ClusterSim] = None
+
+    def bind(self, engine, sim: ClusterSim):
+        self.engine, self.sim = engine, sim
+
+    def _rule(self, task_type: str):
+        r = self.rules.get(task_type, {})
+        return (int(r.get("size", self.default_size)),
+                float(r.get("timeoutMs", self.default_timeout_ms)) / 1000.0)
+
+    def submit(self, task: Task):
+        size, timeout = self._rule(task.type)
+        if size <= 1:
+            JobExecutor.submit(self, task)          # same pod-per-task path
+            return
+        buf = self.buffers[task.type]
+        buf.append(task)
+        if len(buf) >= size:
+            self._flush(task.type)
+        elif len(buf) == 1:
+            deadline = self.sim.t + timeout
+            self.flush_deadline[task.type] = deadline
+            self.sim.schedule(timeout, self._timeout_flush, task.type, deadline)
+
+    def _timeout_flush(self, task_type: str, deadline: float):
+        if self.flush_deadline.get(task_type) == deadline \
+                and self.buffers[task_type]:
+            self._flush(task_type)
+
+    def _flush(self, task_type: str):
+        batch = self.buffers[task_type]
+        self.buffers[task_type] = []
+        self.flush_deadline.pop(task_type, None)
+        if not batch:
+            return
+        cpu = max(t.cpu for t in batch)
+        mem = max(t.mem for t in batch)
+
+        def on_started(sim: ClusterSim, pod: Pod):
+            def run_next(i: int):
+                if i >= len(batch):
+                    sim.delete_pod(pod.id)
+                    return
+                t = batch[i]
+                t.started_at = sim.t
+                sim.task_started(t.cpu)
+
+                def complete():
+                    sim.task_finished(t.cpu)
+                    self.engine.on_task_done(t)
+                    run_next(i + 1)
+
+                sim.schedule(t.duration, complete)
+
+            run_next(0)
+
+        self.sim.submit_pod(f"clustered-{task_type}-x{len(batch)}", cpu, mem,
+                            on_started)
+
+
+class _Pool:
+    def __init__(self, task_type: str, cpu: float, mem: float):
+        self.type = task_type
+        self.cpu, self.mem = cpu, mem
+        self.queue: Deque[Task] = collections.deque()
+        self.workers: Dict[int, Pod] = {}       # pod_id -> Pod
+        self.idle: Deque[int] = collections.deque()
+        self.in_flight = 0
+        self.scale_down_since: Optional[float] = None
+
+    def demand(self) -> float:
+        return len(self.queue) + self.in_flight
+
+
+class WorkerPoolExecutor:
+    """Worker pools with queue-driven proportional auto-scaling.
+
+    pooled_types=None -> a pool per task type (pure model); a sequence ->
+    hybrid model (paper §4.4): those types pooled, the rest run as jobs.
+    """
+
+    def __init__(self, pooled_types: Optional[Sequence[str]] = None,
+                 sync_period: float = HPA_SYNC_PERIOD,
+                 cooldown: float = SCALE_DOWN_STABILIZATION,
+                 job_headroom: float = 2.0):
+        self.pooled_types = set(pooled_types) if pooled_types else None
+        self.sync_period = sync_period
+        self.cooldown = cooldown
+        self.job_headroom = job_headroom        # cores left for job-model tasks
+        self.pools: Dict[str, _Pool] = {}
+        self.engine = None
+        self.sim: Optional[ClusterSim] = None
+        self._tick_scheduled = False
+        self.scale_events: List = []
+
+    def bind(self, engine, sim: ClusterSim):
+        self.engine, self.sim = engine, sim
+
+    # ------------------------------------------------------------ submit --
+    def submit(self, task: Task):
+        if self.pooled_types is not None and task.type not in self.pooled_types:
+            JobExecutor.submit(self, task)      # hybrid: job path
+            return
+        pool = self.pools.get(task.type)
+        if pool is None:
+            pool = self.pools[task.type] = _Pool(task.type, task.cpu, task.mem)
+        pool.queue.append(task)
+        self._dispatch(pool)
+        self._ensure_tick()
+
+    # ---------------------------------------------------------- dispatch --
+    def _dispatch(self, pool: _Pool):
+        while pool.queue and pool.idle:
+            pod_id = pool.idle.popleft()
+            pod = pool.workers.get(pod_id)
+            if pod is None or pod.state != "running":
+                continue
+            task = pool.queue.popleft()
+            self._run_on(pool, pod, task)
+
+    def _run_on(self, pool: _Pool, pod: Pod, task: Task):
+        sim = self.sim
+        pool.in_flight += 1
+        pod.busy = True
+        task.started_at = sim.t
+        sim.task_started(task.cpu)
+
+        def complete():
+            sim.task_finished(task.cpu)
+            pool.in_flight -= 1
+            pod.busy = False
+            self.engine.on_task_done(task)
+            if getattr(pod, "draining", False):
+                # cooperative preemption at the task boundary (graceful
+                # termination): release the node for the pool that is owed it
+                sim.delete_pod(pod.id)
+                pool.workers.pop(pod.id, None)
+            elif pool.queue and pod.state == "running":
+                nxt = pool.queue.popleft()
+                self._run_on(pool, pod, nxt)
+            elif pod.state == "running":
+                pool.idle.append(pod.id)
+
+        sim.schedule(task.duration, complete)
+
+    # --------------------------------------------------------- autoscale --
+    def _ensure_tick(self):
+        if not self._tick_scheduled:
+            self._tick_scheduled = True
+            self.sim.schedule(self.sync_period, self._tick)
+
+    def _tick(self):
+        self._tick_scheduled = False
+        sim = self.sim
+        demand = {p.type: p.demand() for p in self.pools.values()}
+        cpu_req = {p.type: p.cpu for p in self.pools.values()}
+        quota = sim.capacity_cores() - self.job_headroom
+        desired = proportional_replicas(demand, cpu_req, quota)
+        have = {p.type: sum(1 for w in p.workers.values()
+                            if w.state in ("pending", "starting", "running")
+                            and not getattr(w, "draining", False))
+                for p in self.pools.values()}
+        # contention: some pool is owed workers it cannot get from free space
+        shortfall = sum(max(0, desired[t] - have[t]) * cpu_req[t]
+                        for t in desired)
+        contention = shortfall > sim.free_cores() + 1e-9
+        for pool in self.pools.values():
+            want, got = desired.get(pool.type, 0), have[pool.type]
+            if want > got:
+                pool.scale_down_since = None
+                need = want - got
+                # cancel draining workers first — cheaper than new pods
+                for pod in pool.workers.values():
+                    if need and getattr(pod, "draining", False) \
+                            and pod.state == "running":
+                        pod.draining = False
+                        need -= 1
+                for _ in range(need):
+                    self._add_worker(pool)
+                self.scale_events.append((sim.t, pool.type, got, want))
+            elif want < got:
+                # KEDA-style cooldown before scaling down / to zero — but the
+                # proportional-allocation contract overrides it when another
+                # pool is starved (the paper's intertwined-stages requirement)
+                if contention:
+                    self._remove_workers(pool, got - want)
+                    pool.scale_down_since = None
+                    self.scale_events.append((sim.t, pool.type, got, want))
+                elif pool.scale_down_since is None:
+                    pool.scale_down_since = sim.t
+                elif sim.t - pool.scale_down_since >= self.cooldown:
+                    self._remove_workers(pool, got - want)
+                    pool.scale_down_since = None
+                    self.scale_events.append((sim.t, pool.type, got, want))
+            else:
+                pool.scale_down_since = None
+        if any(p.demand() > 0 or p.workers for p in self.pools.values()):
+            self._ensure_tick()
+
+    def _add_worker(self, pool: _Pool):
+        def on_started(sim: ClusterSim, pod: Pod):
+            pool.idle.append(pod.id)
+            self._dispatch(pool)
+
+        pod = self.sim.submit_pod(f"pool-{pool.type}", pool.cpu, pool.mem,
+                                  on_started)
+        pool.workers[pod.id] = pod
+
+    def _remove_workers(self, pool: _Pool, n: int):
+        # prefer idle workers, then pending ones; busy workers are marked
+        # draining and exit at the next task boundary
+        victims = [pid for pid in list(pool.idle)][:n]
+        if len(victims) < n:
+            victims += [p.id for p in pool.workers.values()
+                        if p.state == "pending"][:n - len(victims)]
+        for pid in victims:
+            self.sim.delete_pod(pid)
+            pool.workers.pop(pid, None)
+            try:
+                pool.idle.remove(pid)
+            except ValueError:
+                pass
+        left = n - len(victims)
+        if left > 0:
+            for pod in pool.workers.values():
+                if left <= 0:
+                    break
+                if pod.busy and not getattr(pod, "draining", False):
+                    pod.draining = True
+                    left -= 1
+
+    def shutdown(self):
+        for pool in self.pools.values():
+            for pid in list(pool.workers):
+                self.sim.delete_pod(pid)
+            pool.workers.clear()

@@ -1,0 +1,95 @@
+"""HyperFlow-style workflow model of computation.
+
+A workflow is a DAG of typed tasks. The engine fires tasks whose dependencies
+are satisfied ("signals" in HyperFlow terms) and reacts to completions. This
+mirrors the paper's Section 3.5: the engine is execution-model-agnostic — it
+hands ready tasks to an *executor* (job-based, clustered, or worker-pools).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional
+
+
+@dataclasses.dataclass
+class Task:
+    id: int
+    type: str
+    duration: float                    # seconds of compute on `cpu` cores
+    cpu: float = 1.0                   # requested cores
+    mem: float = 1024.0                # requested MB
+    deps: List[int] = dataclasses.field(default_factory=list)
+    # runtime
+    children: List[int] = dataclasses.field(default_factory=list)
+    unmet: int = 0
+    submitted_at: Optional[float] = None
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.finished_at is not None
+
+
+class Workflow:
+    def __init__(self, name: str = "workflow"):
+        self.name = name
+        self.tasks: Dict[int, Task] = {}
+        self._next_id = 0
+
+    def add(self, type: str, duration: float, deps: Iterable[int] = (),
+            cpu: float = 1.0, mem: float = 1024.0) -> int:
+        tid = self._next_id
+        self._next_id += 1
+        t = Task(tid, type, duration, cpu, mem, list(deps))
+        t.unmet = len(t.deps)
+        self.tasks[tid] = t
+        for d in t.deps:
+            self.tasks[d].children.append(tid)
+        return tid
+
+    def __len__(self) -> int:
+        return len(self.tasks)
+
+    def roots(self) -> List[Task]:
+        return [t for t in self.tasks.values() if t.unmet == 0]
+
+    def complete(self, tid: int, now: float) -> List[Task]:
+        """Mark task done; return newly-ready tasks."""
+        t = self.tasks[tid]
+        assert t.finished_at is None, f"task {tid} completed twice"
+        t.finished_at = now
+        ready = []
+        for c in t.children:
+            ct = self.tasks[c]
+            ct.unmet -= 1
+            if ct.unmet == 0:
+                ready.append(ct)
+        return ready
+
+    def all_done(self) -> bool:
+        return all(t.done for t in self.tasks.values())
+
+    def n_done(self) -> int:
+        return sum(1 for t in self.tasks.values() if t.done)
+
+    def task_types(self) -> Dict[str, int]:
+        out: Dict[str, int] = {}
+        for t in self.tasks.values():
+            out[t.type] = out.get(t.type, 0) + 1
+        return out
+
+    def critical_path(self) -> float:
+        """Longest dependency chain by duration (lower bound on makespan)."""
+        memo: Dict[int, float] = {}
+
+        order = sorted(self.tasks)          # ids are topologically ordered
+        for tid in order:
+            t = self.tasks[tid]
+            base = max((memo[d] for d in t.deps), default=0.0)
+            memo[tid] = base + t.duration
+        return max(memo.values()) if memo else 0.0
+
+    def total_work(self) -> float:
+        """Total core-seconds."""
+        return sum(t.duration * t.cpu for t in self.tasks.values())

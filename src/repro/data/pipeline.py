@@ -1,0 +1,63 @@
+"""Deterministic, stateless, sharded synthetic-LM data pipeline.
+
+Every batch is a pure function of (seed, step) — no iterator state — so a
+restarted worker resumes bit-identically from any checkpointed step (the
+fault-tolerance contract). Token streams follow a Zipf-like marginal with a
+deterministic next-token structure so the cross-entropy actually decreases
+during the e2e example runs (the model has something learnable).
+
+Batches are produced pre-split as (n_micro, mb, S) when a microbatch is
+configured, matching ``Model.input_specs`` so no resharding happens on
+device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+@dataclasses.dataclass
+class SyntheticLM:
+    cfg: ArchConfig
+    shape: ShapeConfig
+    seed: int = 0
+
+    def batch(self, step: int) -> Dict[str, jax.Array]:
+        cfg, shape = self.cfg, self.shape
+        B, S = shape.global_batch, shape.seq_len
+        key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+        k1, k2 = jax.random.split(key)
+        V = cfg.vocab_size
+        # Zipf-ish marginal via squared uniform; learnable structure:
+        # next token = (3 * tok + 7) % V with prob 0.8
+        u = jax.random.uniform(k1, (B, S + 1))
+        base = (u * u * (V - 1)).astype(jnp.int32)
+        prev = jnp.roll(base, 1, axis=1)
+        det = (3 * prev + 7) % V
+        pick = jax.random.uniform(k2, (B, S + 1)) < 0.8
+        toks = jnp.where(pick, det, base)
+        batch = {"tokens": toks[:, :S], "labels": toks[:, 1:]}
+        if cfg.family == "audio":
+            batch["frames"] = jax.random.normal(
+                k1, (B, cfg.encoder_seq, cfg.d_model), jnp.float32
+            ).astype(cfg.adtype)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.random.normal(
+                k2, (B, cfg.num_image_tokens, cfg.d_model), jnp.float32
+            ).astype(cfg.adtype)
+        mb = shape.microbatch
+        if shape.kind == "train" and mb and mb < B:
+            n = B // mb
+            batch = {k: v.reshape((n, mb) + v.shape[1:])
+                     for k, v in batch.items()}
+        return batch
+
+
+def make_batch_fn(cfg: ArchConfig, shape: ShapeConfig, seed: int = 0):
+    ds = SyntheticLM(cfg, shape, seed)
+    return ds.batch

@@ -1,0 +1,11 @@
+"""Layer B — the paper's worker-pool execution model mapped onto TPU mesh
+slices: persistent compiled executables per (arch x step-kind) pool, queue-
+driven proportional slice auto-scaling, fault tolerance and straggler
+mitigation."""
+from repro.engine.pools import (MLTask, SlicePoolExecutor, FleetSim,
+                                CompileCostModel)
+from repro.engine.fault_tolerance import (FaultInjector, StragglerMonitor,
+                                          TrainSupervisor)
+
+__all__ = ["MLTask", "SlicePoolExecutor", "FleetSim", "CompileCostModel",
+           "FaultInjector", "StragglerMonitor", "TrainSupervisor"]

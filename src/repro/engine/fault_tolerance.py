@@ -1,0 +1,120 @@
+"""Fault tolerance: failure injection, checkpoint/restart supervision,
+straggler detection.
+
+The worker-pool model localizes failure handling (DESIGN §7): a dead worker
+drains one pool and its in-flight task is re-queued; training jobs restart
+from the latest checkpoint inside their pool instead of tearing down the
+fleet. ``TrainSupervisor`` implements the restart loop for real training
+processes (used by launch/train.py and the e2e tests); ``StragglerMonitor``
+implements the EWMA-based detection used by both the supervisor and the
+fleet simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager, restore
+
+
+class SimulatedFault(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic fault schedule: raise at the given global steps."""
+    fail_at: tuple = ()
+    fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int):
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise SimulatedFault(f"injected fault at step {step}")
+
+
+class StragglerMonitor:
+    """Per-worker EWMA step times; flags workers slower than
+    ``factor`` x fleet median."""
+
+    def __init__(self, alpha: float = 0.3, factor: float = 1.8,
+                 min_samples: int = 3):
+        self.alpha = alpha
+        self.factor = factor
+        self.min_samples = min_samples
+        self.ewma: Dict[str, float] = {}
+        self.count: Dict[str, int] = {}
+
+    def record(self, worker: str, seconds: float):
+        prev = self.ewma.get(worker)
+        self.ewma[worker] = seconds if prev is None else \
+            self.alpha * seconds + (1 - self.alpha) * prev
+        self.count[worker] = self.count.get(worker, 0) + 1
+
+    def median(self) -> Optional[float]:
+        vals = sorted(self.ewma.values())
+        return vals[len(vals) // 2] if vals else None
+
+    def stragglers(self) -> List[str]:
+        med = self.median()
+        if med is None or med <= 0:
+            return []
+        return [w for w, v in self.ewma.items()
+                if self.count.get(w, 0) >= self.min_samples
+                and v > self.factor * med]
+
+
+class TrainSupervisor:
+    """Checkpoint/restart loop around a stateless step function.
+
+    step_fn(state, step_idx) -> (state, metrics); data must be a pure
+    function of step_idx (our pipeline is), so restarts are bit-exact.
+    """
+
+    def __init__(self, ckpt_dir: str, make_state: Callable[[], object],
+                 step_fn: Callable, every: int = 20, keep: int = 2,
+                 injector: Optional[FaultInjector] = None):
+        self.mgr = CheckpointManager(ckpt_dir, keep=keep, every=every)
+        self.make_state = make_state
+        self.step_fn = step_fn
+        self.injector = injector
+        self.restarts = 0
+        self.monitor = StragglerMonitor()
+
+    def _resume(self):
+        latest = self.mgr.latest()
+        state = self.make_state()
+        if latest is None:
+            return state, 0
+        state = restore(self.mgr.dir, latest, state)
+        return state, latest
+
+    def run(self, total_steps: int, max_restarts: int = 10):
+        metrics_log = []
+        while True:
+            state, start = self._resume()
+            step = start
+            try:
+                while step < total_steps:
+                    if self.injector:
+                        self.injector.check(step)
+                    t0 = time.perf_counter()
+                    state, metrics = self.step_fn(state, step)
+                    jax.block_until_ready(
+                        jax.tree.leaves(metrics)[0] if metrics else
+                        jax.tree.leaves(state)[0])
+                    self.monitor.record("self", time.perf_counter() - t0)
+                    step += 1
+                    metrics_log.append((step, metrics))
+                    self.mgr.maybe_save(step, state)
+                self.mgr.maybe_save(step, state, force=True)
+                self.mgr.wait()
+                return state, metrics_log, self.restarts
+            except SimulatedFault:
+                self.restarts += 1
+                self.mgr.wait()
+                if self.restarts > max_restarts:
+                    raise

@@ -1,0 +1,94 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long (padded) KV
+cache. The q tile is tiny, so all G group-queries of one kv head are folded
+into MXU rows ((G, H) x (H, block_k)); kv tiles stream along the arbitrary
+grid dim with validity masking against the current position.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, block_k, nk):
+    b, kh, j = (pl.program_id(n) for n in range(3))
+    kv_valid = valid_ref[0]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    kpos_lo = j * block_k
+
+    @pl.when(kpos_lo < kv_valid)
+    def _compute():
+        q = q_ref[0, 0, 0, :, :].astype(jnp.float32)      # (G, H)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (bk, H)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        scale = q.shape[-1] ** -0.5
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = kpos_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < kv_valid
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0, 0, :, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, kv_valid, *, block_k=512, interpret=False):
+    """q: (B, 1, K, G, H); k/v: (B, Smax, K, H); kv_valid: int32 () or (1,)
+    number of valid cache slots. Returns (B, 1, K, G, H)."""
+    B, one, K, G, H = q.shape
+    assert one == 1
+    Smax = k.shape[1]
+    bk = min(block_k, Smax)
+    assert Smax % bk == 0
+    nk = Smax // bk
+    grid = (B, K, nk)
+    kv_valid = jnp.asarray(kv_valid, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, block_k=bk, nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, G, H), lambda b, kh, j, *_: (b, 0, kh, 0, 0)),
+                pl.BlockSpec((1, bk, 1, H), lambda b, kh, j, *_: (b, j, kh, 0)),
+                pl.BlockSpec((1, bk, 1, H), lambda b, kh, j, *_: (b, j, kh, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, G, H),
+                                   lambda b, kh, j, *_: (b, 0, kh, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, H), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+                pltpu.VMEM((G,), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, 1, K, G, H), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(kv_valid, q, k, v)
+    return out

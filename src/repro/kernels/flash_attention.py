@@ -1,0 +1,134 @@
+"""Pallas TPU flash-attention forward kernel.
+
+TPU-native schedule (DESIGN §Hardware-adaptation): the GPU flash-attention
+warp layout is replaced by an MXU-tile schedule — q tiles of (block_q, head
+dim) stay resident in VMEM while k/v tiles stream HBM->VMEM along the
+innermost ("arbitrary") grid dimension; the online-softmax running max /
+normalizer / accumulator live in VMEM scratch. Causal and sliding-window
+masks skip fully-masked k/v tiles via ``pl.when`` (no MXU work issued).
+
+Layout: q (B, Sq, K, G, H), k/v (B, Skv, K, H) — GQA never materializes
+repeated K/V; the q tile folds the G group dim into rows so the MXU matmul
+is (block_q*G, H) x (H, block_k), hardware-aligned for H, block_k multiples
+of 128.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                acc_ref, m_ref, l_ref, *, causal, window, kv_valid,
+                block_q, block_k, nk):
+    b, kh, g, i, j = (pl.program_id(n) for n in range(5))
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qpos_lo = i * block_q
+    kpos_lo = j * block_k
+    # tile-level skip: causal (tile entirely above diagonal) and window
+    # (tile entirely left of the band)
+    live = True
+    if causal:
+        live = kpos_lo <= qpos_lo + block_q - 1
+    if window:
+        live = jnp.logical_and(live,
+                               kpos_lo + block_k - 1 > qpos_lo - window)
+    if kv_valid is not None:
+        live = jnp.logical_and(live, kpos_lo < kv_valid)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, 0, :].astype(jnp.float32)      # (bq, H)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)         # (bk, H)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        scale = q.shape[-1] ** -0.5
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = qpos_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = kpos_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        if kv_valid is not None:
+            mask &= kpos < kv_valid
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0, 0, :] = m_ref[...] + jnp.log(l)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, window=0, kv_valid=None,
+                        block_q=512, block_k=512, interpret=False):
+    """Returns (out (B,Sq,K,G,H), lse (B,K,G,Sq))."""
+    B, Sq, K, G, H = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, "pad sequences to block multiples"
+    nq, nk = Sq // bq, Skv // bk
+    grid = (B, K, G, nq, nk)
+
+    kernel = functools.partial(
+        _fwd_kernel, causal=causal, window=window, kv_valid=kv_valid,
+        block_q=bq, block_k=bk, nk=nk)
+
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, 1, H),
+                         lambda b, kh, g, i, j: (b, i, kh, g, 0)),
+            pl.BlockSpec((1, bk, 1, H),
+                         lambda b, kh, g, i, j: (b, j, kh, 0)),
+            pl.BlockSpec((1, bk, 1, H),
+                         lambda b, kh, g, i, j: (b, j, kh, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, 1, 1, H),
+                         lambda b, kh, g, i, j: (b, i, kh, g, 0)),
+            pl.BlockSpec((1, 1, 1, bq),
+                         lambda b, kh, g, i, j: (b, kh, g, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sq, K, G, H), q.dtype),
+            jax.ShapeDtypeStruct((B, K, G, Sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, H), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse

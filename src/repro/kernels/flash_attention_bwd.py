@@ -1,0 +1,197 @@
+"""Pallas TPU flash-attention backward kernels.
+
+Standard two-pass flash backward with the softmax statistics (lse) and
+D = rowsum(dO ∘ O) precomputed by the wrapper:
+
+  dQ pass — grid (B, K, G, nq, [nk arbitrary]): each q tile accumulates
+      dQ_i += (P ∘ (dP - D)) · K_j over streamed k/v tiles,
+      P = exp(S - lse), dP = dO · Vᵀ.
+  dKV pass — grid (B, K, nk, [nq arbitrary]): each kv tile accumulates
+      dK_j += (P ∘ (dP - D))ᵀ · Q_i and dV_j += Pᵀ · dO_i over streamed q
+      tiles (the G group dim is folded into MXU rows).
+
+Both passes skip fully-masked tiles via ``pl.when`` exactly like the
+forward kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mask(qpos_lo, kpos_lo, shape_qk, causal, window, kv_valid):
+    qpos = qpos_lo + jax.lax.broadcasted_iota(jnp.int32, shape_qk, 0)
+    kpos = kpos_lo + jax.lax.broadcasted_iota(jnp.int32, shape_qk, 1)
+    m = jnp.ones(shape_qk, jnp.bool_)
+    if causal:
+        m &= kpos <= qpos
+    if window:
+        m &= kpos > qpos - window
+    if kv_valid is not None:
+        m &= kpos < kv_valid
+    return m
+
+
+def _live(qpos_lo, kpos_lo, bq, bk, causal, window, kv_valid):
+    live = True
+    if causal:
+        live = kpos_lo <= qpos_lo + bq - 1
+    if window:
+        live = jnp.logical_and(live, kpos_lo + bk - 1 > qpos_lo - window)
+    if kv_valid is not None:
+        live = jnp.logical_and(live, kpos_lo < kv_valid)
+    return live
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, dq_ref,
+               acc_ref, *, causal, window, kv_valid, bq, bk, nk, scale):
+    j = pl.program_id(4)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos_lo = pl.program_id(3) * bq
+    kpos_lo = j * bk
+
+    @pl.when(_live(qpos_lo, kpos_lo, bq, bk, causal, window, kv_valid))
+    def _compute():
+        q = q_ref[0, :, 0, 0, :]
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        do = do_ref[0, :, 0, 0, :]
+        lse = lse_ref[0, 0, 0, :]
+        D = d_ref[0, 0, 0, :]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = _mask(qpos_lo, kpos_lo, s.shape, causal, window, kv_valid)
+        p = jnp.where(mask, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - D[:, None]) * scale
+        acc_ref[...] += jax.lax.dot_general(
+            ds.astype(k.dtype), k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nk - 1)
+    def _final():
+        dq_ref[0, :, 0, 0, :] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref,
+                dk_ref, dv_ref, dk_acc, dv_acc, *,
+                causal, window, kv_valid, bq, bk, nq, G, scale):
+    i = pl.program_id(3)
+
+    @pl.when(i == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    qpos_lo = i * bq
+    kpos_lo = pl.program_id(2) * bk
+
+    @pl.when(_live(qpos_lo, kpos_lo, bq, bk, causal, window, kv_valid))
+    def _compute():
+        # fold the G group dim into MXU rows: (bq*G, H)
+        q = q_ref[0, :, 0, :, :].reshape(-1, q_ref.shape[-1])
+        do = do_ref[0, :, 0, :, :].reshape(-1, do_ref.shape[-1])
+        lse = lse_ref[0, 0, :, :].T.reshape(-1)          # (bq*G,)
+        D = d_ref[0, 0, :, :].T.reshape(-1)
+        k = k_ref[0, :, 0, :]
+        v = v_ref[0, :, 0, :]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        # row r of s corresponds to q position qpos_lo + r // G
+        rows = s.shape[0]
+        qpos = qpos_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // G
+        kpos = kpos_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        m = jnp.ones(s.shape, jnp.bool_)
+        if causal:
+            m &= kpos <= qpos
+        if window:
+            m &= kpos > qpos - window
+        if kv_valid is not None:
+            m &= kpos < kv_valid
+        p = jnp.where(m, jnp.exp(s - lse[:, None]), 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - D[:, None]) * scale
+        dv_acc[...] += jax.lax.dot_general(
+            p.astype(do.dtype), do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dk_acc[...] += jax.lax.dot_general(
+            ds.astype(q.dtype), q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(i == nq - 1)
+    def _final():
+        dk_ref[0, :, 0, :] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd(q, k, v, out, lse, dout, *, causal=True, window=0,
+                        kv_valid=None, block_q=512, block_k=512,
+                        interpret=False):
+    """Returns (dq, dk, dv). lse: (B,K,G,Sq) from the forward kernel."""
+    B, Sq, K, G, H = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    nq, nk = Sq // bq, Skv // bk
+    scale = H ** -0.5
+    # D = rowsum(dO * O): cheap elementwise+reduce, computed outside
+    D = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    D = D.transpose(0, 2, 3, 1)                         # (B,K,G,Sq)
+
+    q_spec = pl.BlockSpec((1, bq, 1, 1, H),
+                          lambda b, kh, g, i, j: (b, i, kh, g, 0))
+    kv_spec = pl.BlockSpec((1, bk, 1, H),
+                           lambda b, kh, g, i, j: (b, j, kh, 0))
+    stat_spec = pl.BlockSpec((1, 1, 1, bq),
+                             lambda b, kh, g, i, j: (b, kh, g, i))
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, causal=causal, window=window,
+                          kv_valid=kv_valid, bq=bq, bk=bk, nk=nk,
+                          scale=scale),
+        grid=(B, K, G, nq, nk),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, stat_spec, stat_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, H), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",) * 4 + ("arbitrary",)),
+        interpret=interpret,
+    )(q, k, v, dout, lse, D)
+
+    q_spec2 = pl.BlockSpec((1, bq, 1, G, H),
+                           lambda b, kh, j, i: (b, i, kh, 0, 0))
+    kv_spec2 = pl.BlockSpec((1, bk, 1, H),
+                            lambda b, kh, j, i: (b, j, kh, 0))
+    stat_spec2 = pl.BlockSpec((1, 1, G, bq),
+                              lambda b, kh, j, i: (b, kh, 0, i))
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, causal=causal, window=window,
+                          kv_valid=kv_valid, bq=bq, bk=bk, nq=nq, G=G,
+                          scale=scale),
+        grid=(B, K, nk, nq),
+        in_specs=[q_spec2, kv_spec2, kv_spec2, q_spec2, stat_spec2,
+                  stat_spec2],
+        out_specs=[kv_spec2, kv_spec2],
+        out_shape=[jax.ShapeDtypeStruct(k.shape, k.dtype),
+                   jax.ShapeDtypeStruct(v.shape, v.dtype)],
+        scratch_shapes=[pltpu.VMEM((bk, H), jnp.float32),
+                        pltpu.VMEM((bk, H), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, dout, lse, D)
+    return dq, dk, dv

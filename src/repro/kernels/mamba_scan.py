@@ -1,0 +1,84 @@
+"""Pallas TPU chunked-SSD (Mamba2) kernel.
+
+One grid cell owns a (batch, head) pair and walks chunks sequentially
+("arbitrary" dim), carrying the (P, N) state in VMEM scratch. Within a
+chunk everything is MXU matmuls on (Q, ...) tiles: the intra-chunk
+decay-masked C·Bᵀ scores, the chunk-summary state update, and the
+state-readout — the same intra/inter decomposition as the pure-jnp
+``repro.models.ssm.ssd_chunked`` but without materializing any (Q, Q)
+tensor in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *, nc):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    Bm = b_ref[0, :, :].astype(jnp.float32)          # (Q, N)
+    Cm = c_ref[0, :, :].astype(jnp.float32)          # (Q, N)
+
+    a_cs = jnp.cumsum(a)                              # (Q,)
+    # intra-chunk: L[l,s] = exp(a_cs[l] - a_cs[s]) for s<=l
+    seg = a_cs[:, None] - a_cs[None, :]
+    Q = a.shape[0]
+    li = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(si <= li, jnp.exp(seg), 0.0)
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)   # (Q,Q)
+    y = jax.lax.dot_general(cb * L, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)    # (Q,P)
+    # inter-chunk: read out previous state with decay from chunk start
+    state = state_ref[...]                            # (P, N)
+    y += jnp.exp(a_cs)[:, None] * jax.lax.dot_general(
+        Cm, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[0, :, 0, :] = y.astype(o_ref.dtype)
+    # state update: decay to end-of-chunk
+    decay_end = jnp.exp(a_cs[-1] - a_cs)              # (Q,)
+    upd = jax.lax.dot_general(x, Bm * decay_end[:, None],
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P,N)
+    state_ref[...] = state * jnp.exp(a_cs[-1]) + upd
+
+
+def ssd_scan(x, a, Bm, Cm, *, chunk=128, interpret=False):
+    """x: (B, S, H, P) pre-scaled by dt; a: (B, S, H) log-decay;
+    Bm/Cm: (B, S, N). Returns y (B, S, H, P) (state readout fused).
+    S must divide by chunk."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    grid = (B, H, nc)
+    kernel = functools.partial(_ssd_kernel, nc=nc)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, P), lambda b, h, j: (b, j, h, 0)),
+            pl.BlockSpec((1, Q, 1), lambda b, h, j: (b, j, h)),
+            pl.BlockSpec((1, Q, N), lambda b, h, j: (b, j, 0)),
+            pl.BlockSpec((1, Q, N), lambda b, h, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Q, 1, P), lambda b, h, j: (b, j, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, a, Bm, Cm)

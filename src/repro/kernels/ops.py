@@ -1,0 +1,96 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container) so every wrapper is
+runnable/testable on CPU; on TPU backends the kernels lower natively. The
+flash-attention backward pass reuses the blocked XLA implementation from
+``repro.models.attention`` (same math as the fwd kernel's schedule) — a
+Pallas bwd kernel is listed as future work in DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import flash_decode as _flash_decode
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.mamba_scan import ssd_scan as _ssd_scan
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm
+from repro.kernels.rmsnorm import rmsnorm_residual as _rmsnorm_residual
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "kv_valid",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal=True, window=0, kv_valid=None,
+                    block_q=512, block_k=512):
+    out, _ = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, kv_valid=kv_valid,
+        block_q=block_q, block_k=block_k, interpret=_default_interpret())
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_diff(q, k, v, causal=True, window=0, kv_valid=None,
+                         block_q=512, block_k=512):
+    """Differentiable flash attention: Pallas forward AND backward kernels
+    (``flash_attention_bwd``)."""
+    out, _ = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, kv_valid=kv_valid,
+        block_q=block_q, block_k=block_k, interpret=_default_interpret())
+    return out
+
+
+def _fa_fwd(q, k, v, causal, window, kv_valid, block_q, block_k):
+    out, lse = flash_attention_fwd(
+        q, k, v, causal=causal, window=window, kv_valid=kv_valid,
+        block_q=block_q, block_k=block_k, interpret=_default_interpret())
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(causal, window, kv_valid, block_q, block_k, res, dout):
+    from repro.kernels.flash_attention_bwd import flash_attention_bwd
+    q, k, v, out, lse = res
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, out, lse, dout, causal=causal, window=window,
+        kv_valid=kv_valid, block_q=block_q, block_k=block_k,
+        interpret=_default_interpret())
+    return dq, dk, dv
+
+
+flash_attention_diff.defvjp(_fa_fwd, _fa_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def flash_decode(q, k, v, kv_valid, *, block_k=512):
+    return _flash_decode(q, k, v, kv_valid, block_k=block_k,
+                         interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, scale, *, eps=1e-6, block_rows=256):
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    y = _rmsnorm(x2, scale, eps=eps, block_rows=block_rows,
+                 interpret=_default_interpret())
+    return y.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm_residual(x, residual, scale, *, eps=1e-6, block_rows=256):
+    shape = x.shape
+    y, r = _rmsnorm_residual(x.reshape(-1, shape[-1]),
+                             residual.reshape(-1, shape[-1]), scale,
+                             eps=eps, block_rows=block_rows,
+                             interpret=_default_interpret())
+    return y.reshape(shape), r.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, a, Bm, Cm, *, chunk=128):
+    return _ssd_scan(x, a, Bm, Cm, chunk=chunk,
+                     interpret=_default_interpret())

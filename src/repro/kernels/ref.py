@@ -1,0 +1,70 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, kv_valid=None):
+    """q: (B,Sq,K,G,H); k/v: (B,Skv,K,H) — materialized softmax attention."""
+    B, Sq, K, G, H = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (H ** -0.5)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    if kv_valid is not None:
+        mask &= kpos < kv_valid
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_ref(q, k, v, kv_valid):
+    """q: (B,1,K,G,H); k/v: (B,Smax,K,H)."""
+    return attention_ref(q, k, v, causal=False, window=0, kv_valid=kv_valid)
+
+
+def rmsnorm_ref(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_residual_ref(x, residual, scale, eps=1e-6):
+    s = (x.astype(jnp.float32) + residual.astype(jnp.float32))
+    return rmsnorm_ref(s, scale, eps).astype(x.dtype), s.astype(x.dtype)
+
+
+def ssd_ref(x, a, Bm, Cm):
+    """Sequential SSD recurrence (the definitionally-correct oracle).
+
+    x: (B,S,H,P) pre-scaled by dt; a: (B,S,H) log decay; Bm/Cm: (B,S,N).
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(state, t):
+        xt, at, bt, ct = t
+        state = state * jnp.exp(at)[..., None, None] \
+            + jnp.einsum("bhp,bn->bhpn", xt, bt)
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    init = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          a.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2).astype(jnp.float32),
+          Cm.transpose(1, 0, 2).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, init, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)      # (B,S,H,P)

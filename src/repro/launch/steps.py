@@ -1,0 +1,252 @@
+"""Step builders: train_step / prefill_step / decode_step for any
+(architecture x shape x mesh) cell, with shardings resolved from the
+per-arch policy. Used by the trainer, the server, and the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models.model import Model, build_model, cache_template
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.parallel.policies import default_fsdp, policy_for
+from repro.parallel.sharding import ShardingPolicy, fsdp_param_spec, use_policy
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class Cell:
+    """One lowered unit of work: a step fn + abstract inputs + shardings."""
+    arch: ArchConfig
+    shape: ShapeConfig
+    policy: ShardingPolicy
+    step_fn: Any                    # python callable (to be jitted)
+    in_abstract: Tuple              # pytree of ShapeDtypeStruct
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jitted(self):
+        return jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        return self.jitted().lower(*self.in_abstract)
+
+
+def _named(policy: ShardingPolicy, spec: P) -> NamedSharding:
+    return NamedSharding(policy.mesh, spec)
+
+
+def _default_context_parallel(arch, shape, tp, overrides):
+    """Context-parallel attention by default when heads can't use the model
+    axis (K % tp and G % tp both nonzero): shard the q sequence inside flash
+    (KV replicated) — removes the tp-fold replicated attention compute.
+    (EXPERIMENTS §Perf, beyond-paper.)"""
+    K = arch.num_kv_heads
+    G = max(1, arch.num_heads // K)
+    if (shape.kind in ("train", "prefill")
+            and (overrides or {}).get("attn_q_seq") is None
+            and arch.family in ("dense", "vlm", "audio")   # MoE: the model
+            # axis belongs to EP — seq-sharded tokens entering the dispatch
+            # einsum cause reshard storms (measured 5x regression)
+            and K % tp and G % tp and shape.seq_len % tp == 0):
+        return {**(overrides or {}), "attn_q_seq": "model"}
+    return overrides
+
+
+def _param_shardings(model: Model, policy: ShardingPolicy):
+    abs_p, axes = model.abstract()
+    specs = jax.tree.map(
+        lambda leaf, ax: fsdp_param_spec(policy, ax, leaf.shape),
+        abs_p, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    shardings = jax.tree.map(lambda s: _named(policy, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return abs_p, specs, shardings
+
+
+def _batch_shardings(policy: ShardingPolicy, specs_axes: Dict[str, Any]):
+    abstract, shardings = {}, {}
+    for name, (spec, axes) in specs_axes.items():
+        if name in ("cache", "pos"):
+            continue
+        abstract[name] = spec
+        shardings[name] = _named(policy, policy.spec(*axes))
+    return abstract, shardings
+
+
+def _cache_shardings(policy: ShardingPolicy, spec, axes):
+    shardings = jax.tree.map(
+        lambda s, ax: _named(policy, policy.spec(*ax)),
+        spec, axes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return shardings
+
+
+# --------------------------------------------------------------- train -----
+
+def build_train_cell(arch: ArchConfig, shape: ShapeConfig, mesh, *,
+                     opt: Optional[AdamWConfig] = None,
+                     fsdp: Optional[bool] = None,
+                     overrides=None, seq_shard: bool = False,
+                     remat: Optional[bool] = None,
+                     accum_dtype=jnp.float32) -> Cell:
+    assert shape.kind == "train"
+    if remat is not None and remat != arch.remat:
+        arch = dataclasses.replace(arch, remat=remat)
+    model = build_model(arch)
+    opt = opt or AdamWConfig(moment_dtype=arch.opt_dtype)
+    tp = mesh.shape.get("model", 1)
+    if fsdp is None:
+        fsdp = default_fsdp(arch, "train", tp)
+    overrides = _default_context_parallel(arch, shape, tp, overrides)
+    policy = policy_for(arch, mesh, fsdp=fsdp, overrides=overrides,
+                        seq_shard=seq_shard,
+                        global_batch=shape.microbatch or shape.global_batch)
+
+    abs_p, p_specs, p_shard = _param_shardings(model, policy)
+    mdt = jnp.dtype(opt.moment_dtype)
+    abs_m = jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, mdt), abs_p)
+    abs_state = {"params": abs_p, "m": abs_m, "v": abs_m,
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    state_shard = {"params": p_shard, "m": p_shard, "v": p_shard,
+                   "step": _named(policy, P())}
+
+    specs_axes = model.input_specs(shape, dtype=arch.adtype)
+    abs_batch, batch_shard = _batch_shardings(policy, specs_axes)
+    micro = shape.microbatch and shape.microbatch < shape.global_batch
+
+    def train_step(state, batch):
+        with use_policy(policy):
+            params = state["params"]
+
+            def loss_fn(p, b):
+                return model.loss(p, b)
+
+            if micro:
+                n_micro = shape.global_batch // shape.microbatch
+                # fp32 accumulators SHARDED like the params: the per-micro
+                # cross-data grad combine lowers to reduce-scatter onto the
+                # FSDP shard instead of a full all-reduce (16x less volume),
+                # and the accumulator itself stays sharded in HBM
+                acc0 = jax.tree.map(
+                    lambda x, s: jax.lax.with_sharding_constraint(
+                        jnp.zeros(x.shape, accum_dtype), s),
+                    params, p_shard)
+
+                def micro_body(carry, mb):
+                    gacc, lsum = carry
+                    (loss, _), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, mb)
+                    gacc = jax.tree.map(
+                        lambda a, g, s: jax.lax.with_sharding_constraint(
+                            a + g.astype(accum_dtype), s),
+                        gacc, grads, p_shard)
+                    return (gacc, lsum + loss), None
+
+                (gacc, lsum), _ = jax.lax.scan(
+                    micro_body, (acc0, jnp.float32(0)), batch)
+                grads = jax.tree.map(lambda g: g / n_micro, gacc)
+                loss = lsum / n_micro
+            else:
+                (loss, _), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, batch)
+
+            new_p, new_opt, stats = adamw_update(
+                params, grads, {"m": state["m"], "v": state["v"],
+                                "step": state["step"]}, opt)
+            new_state = {"params": new_p, "m": new_opt["m"],
+                         "v": new_opt["v"], "step": new_opt["step"]}
+            metrics = {"loss": loss, **stats}
+            return new_state, metrics
+
+    metrics_shard = {"loss": _named(policy, P()),
+                     "grad_norm": _named(policy, P()),
+                     "lr": _named(policy, P())}
+    return Cell(arch, shape, policy, train_step,
+                (abs_state, abs_batch),
+                (state_shard, batch_shard),
+                (state_shard, metrics_shard),
+                donate_argnums=(0,))
+
+
+def init_train_state(model: Model, rng, opt: AdamWConfig):
+    params = model.init(rng)
+    o = adamw_init(params, opt)
+    return {"params": params, "m": o["m"], "v": o["v"], "step": o["step"]}
+
+
+# --------------------------------------------------------------- serve -----
+
+def build_serve_cell(arch: ArchConfig, shape: ShapeConfig, mesh, *,
+                     fsdp: Optional[bool] = None, overrides=None,
+                     seq_shard: bool = False, cache_dtype=None) -> Cell:
+    assert shape.kind in ("prefill", "decode")
+    model = build_model(arch)
+    tp = mesh.shape.get("model", 1)
+    if fsdp is None:
+        fsdp = default_fsdp(arch, shape.kind, tp)
+    overrides = _default_context_parallel(arch, shape, tp, overrides)
+    policy = policy_for(arch, mesh, fsdp=fsdp, overrides=overrides,
+                        seq_shard=seq_shard, global_batch=shape.global_batch)
+    # Default: decode of dense-family archs whose heads can't use the model
+    # axis gets a sequence-sharded KV cache (sequence-parallel flash-decode,
+    # EXPERIMENTS §Perf Cell A). Ring caches (SWA) keep the plain path.
+    if (shape.kind == "decode" and (overrides or {}).get("cache_seq") is None
+            and arch.family in ("dense", "moe", "vlm", "audio")
+            and not arch.sliding_window
+            and policy.rules.get("kv_heads") is None
+            and policy.rules.get("qgroup") is None
+            and shape.seq_len % tp == 0):
+        policy = policy_for(arch, mesh, fsdp=fsdp,
+                            overrides={**(overrides or {}),
+                                       "cache_seq": "model"},
+                            seq_shard=seq_shard,
+                            global_batch=shape.global_batch)
+
+    abs_p, _, p_shard = _param_shardings(model, policy)
+    specs_axes = model.input_specs(shape, dtype=arch.adtype,
+                                   cache_dtype=cache_dtype)
+    abs_batch, batch_shard = _batch_shardings(policy, specs_axes)
+    cache_spec, cache_axes = specs_axes["cache"]
+    cache_shard = _cache_shardings(policy, cache_spec, cache_axes)
+
+    logits_shard = _named(policy, policy.spec("batch", None, "vocab"))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch, cache):
+            with use_policy(policy):
+                return model.prefill(params, batch, cache)
+
+        return Cell(arch, shape, policy, prefill_step,
+                    (abs_p, abs_batch, cache_spec),
+                    (p_shard, batch_shard, cache_shard),
+                    (logits_shard, cache_shard),
+                    donate_argnums=(2,))
+
+    def decode_step(params, tokens, cache, pos):
+        with use_policy(policy):
+            return model.decode_step(params, tokens, cache, pos)
+
+    tok_shard = batch_shard["tokens"]
+    pos_shard = _named(policy, P())
+    return Cell(arch, shape, policy, decode_step,
+                (abs_p, abs_batch["tokens"], cache_spec,
+                 specs_axes["pos"][0]),
+                (p_shard, tok_shard, cache_shard, pos_shard),
+                (logits_shard, cache_shard),
+                donate_argnums=(2,))
+
+
+def build_cell(arch: ArchConfig, shape: ShapeConfig, mesh, **kw) -> Cell:
+    if shape.kind == "train":
+        return build_train_cell(arch, shape, mesh, **kw)
+    return build_serve_cell(arch, shape, mesh, **kw)

@@ -1,0 +1,5 @@
+from repro.models.model import (build_model, Model, count_params,
+                                abstract_params, param_partition_specs)
+
+__all__ = ["build_model", "Model", "count_params", "abstract_params",
+           "param_partition_specs"]

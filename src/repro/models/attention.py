@@ -1,0 +1,468 @@
+"""Attention: GQA with RoPE, KV caches (linear + ring/SWA), flash algorithm.
+
+Two execution paths, selected by shape:
+  * ``dense_attention`` — materialized-logits oracle (small sequences, tests).
+  * ``flash_attention`` — blocked online-softmax with custom VJP. This is the
+    XLA fallback with the same schedule as the Pallas TPU kernel
+    (``repro.kernels.flash_attention``); on CPU dry-runs this path lowers.
+
+Layout convention: q is head-grouped ``(B, S, K, G, H)`` (K = kv heads,
+G = q-heads-per-kv-head) so GQA never materializes repeated K/V and the
+TP sharding of either K or G stays a plain dim sharding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import rope_apply
+from repro.parallel.sharding import shard
+
+NEG_INF = -1e30
+
+
+def _block_mask(qpos, kpos, causal: bool, window: int, kv_valid):
+    """Validity mask with explicit leading batch dim.
+
+    qpos: (Q,) or (I, Q) query positions; kpos: (J,) key positions;
+    kv_valid: None | scalar | (B,) count of valid kv slots.
+    Returns (B_or_1, [I,] Q, J).
+    """
+    qp = qpos[..., None]                                  # (..., Q, 1)
+    m = jnp.ones(qpos.shape + kpos.shape, bool)           # (..., Q, J)
+    if causal:
+        m &= kpos <= qp
+    if window:
+        m &= kpos > qp - window
+    m = m[None]                                           # (1, ..., Q, J)
+    if kv_valid is not None:
+        kv = jnp.asarray(kv_valid)
+        if kv.ndim == 0:
+            m = m & (kpos < kv)
+        else:                                             # per-batch (B,)
+            valid = kpos[None, :] < kv[:, None]           # (B, J)
+            valid = valid.reshape((kv.shape[0],)
+                                  + (1,) * (m.ndim - 3) + (1, kpos.shape[0]))
+            m = m & valid
+    return m
+
+
+# ----------------------------------------------------------- dense path ----
+
+@jax.named_scope("dense_attention")
+def dense_attention(q, k, v, *, causal=True, window=0, kv_valid=None,
+                    q_offset=0, kpos=None):
+    """q: (B,Sq,K,G,H); k,v: (B,Skv,K,H). Returns (B,Sq,K,G,H)."""
+    B, Sq, K, G, H = q.shape
+    Skv = k.shape[1]
+    scale = H ** -0.5
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = q_offset + jnp.arange(Sq)
+    if kpos is None:
+        kpos = jnp.arange(Skv)
+    mask = _block_mask(qpos, kpos, causal, window, kv_valid)   # (B|1,Sq,Skv)
+    mask = mask[:, None, None]                                 # (B|1,1,1,Sq,Skv)
+    s = jnp.where(mask, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    w = jnp.where(mask, w, 0.0)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------- flash path ----
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 7, 8))
+def _flash(q, k, v, causal, window, kv_valid, qpos0, block_q, block_k):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, kv_valid, qpos0,
+                             block_q, block_k)
+    return out
+
+
+@jax.named_scope("flash_attention")
+def _flash_fwd_impl(q, k, v, causal, window, kv_valid, qpos0, bq, bk):
+    B, Sq, K, G, H = q.shape
+    Skv = k.shape[1]
+    nq, nk = Sq // bq, Skv // bk
+    scale = H ** -0.5
+    qb = q.reshape(B, nq, bq, K, G, H)
+    kb = k.reshape(B, nk, bk, K, H)
+    vb = v.reshape(B, nk, bk, K, H)
+    qpos = (qpos0 + jnp.arange(Sq)).reshape(nq, bq)
+
+    def body(carry, j):
+        acc, m, l = carry
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+        kpos = j * bk + jnp.arange(bk)
+        # mixed-precision dot (bf16 in, f32 accum) via preferred_element_type
+        # — explicit .astype(f32) casts get hoisted above the KV-cache
+        # update by XLA and force full-cache convert round-trips per layer
+        s = jnp.einsum("biqkgh,bjkh->bikgqj", qb, kj,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _block_mask(qpos, kpos, causal, window, kv_valid)
+        mask = mask[:, :, None, None]            # (B|1,I,1,1,Q,J)
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_new = jnp.maximum(m_new, NEG_INF)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bikgqj,bjkh->bikgqh", p.astype(v.dtype), vj,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((B, nq, K, G, bq, H), jnp.float32)
+    m0 = jnp.full((B, nq, K, G, bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, nq, K, G, bq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(body, (acc0, m0, l0), jnp.arange(nk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, Sq, K, G, H).astype(q.dtype)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))      # (B,nq,K,G,bq)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, window, kv_valid, qpos0, bq, bk):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, kv_valid, qpos0, bq, bk)
+    return out, (q, k, v, out, lse, kv_valid, qpos0)
+
+
+@jax.named_scope("flash_attention")
+def _flash_bwd(causal, window, bq, bk, res, dout):
+    q, k, v, out, lse, kv_valid, qpos0 = res
+    B, Sq, K, G, H = q.shape
+    Skv = k.shape[1]
+    nq, nk = Sq // bq, Skv // bk
+    scale = H ** -0.5
+    qb = q.reshape(B, nq, bq, K, G, H)
+    kb = k.reshape(B, nk, bk, K, H)
+    vb = v.reshape(B, nk, bk, K, H)
+    dob = dout.reshape(B, nq, bq, K, G, H)
+    ob = out.reshape(B, nq, bq, K, G, H)
+    qpos = (qpos0 + jnp.arange(Sq)).reshape(nq, bq)
+    # D_i = rowsum(dO * O)
+    D = jnp.sum(dob.astype(jnp.float32) * ob.astype(jnp.float32), axis=-1)
+    D = D.transpose(0, 1, 3, 4, 2)                # (B,nq,K,G,bq)
+
+    def body(dq_acc, j):
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+        kpos = j * bk + jnp.arange(bk)
+        s = jnp.einsum("biqkgh,bjkh->bikgqj", qb, kj,
+                       preferred_element_type=jnp.float32) * scale
+        mask = _block_mask(qpos, kpos, causal, window, kv_valid)
+        mask = mask[:, :, None, None]            # (B|1,I,1,1,Q,J)
+        p = jnp.exp(s - lse[..., None])
+        p = jnp.where(mask, p, 0.0)               # (B,I,K,G,Q,J)
+        dp = jnp.einsum("biqkgh,bjkh->bikgqj", dob, vj,
+                        preferred_element_type=jnp.float32)
+        ds = (p * (dp - D[..., None]) * scale).astype(k.dtype)
+        pl = p.astype(v.dtype)
+        dq_j = jnp.einsum("bikgqj,bjkh->bikgqh", ds, kj,
+                          preferred_element_type=jnp.float32)
+        dk_j = jnp.einsum("bikgqj,biqkgh->bjkh", ds, qb,
+                          preferred_element_type=jnp.float32)
+        dv_j = jnp.einsum("bikgqj,biqkgh->bjkh", pl, dob,
+                          preferred_element_type=jnp.float32)
+        return dq_acc + dq_j, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, nq, K, G, bq, H), jnp.float32)
+    dq, (dk, dv) = jax.lax.scan(body, dq0, jnp.arange(nk))
+    dq = dq.transpose(0, 1, 4, 2, 3, 5).reshape(B, Sq, K, G, H).astype(q.dtype)
+    dk = dk.transpose(1, 0, 2, 3, 4).reshape(B, Skv, K, H).astype(k.dtype)
+    dv = dv.transpose(1, 0, 2, 3, 4).reshape(B, Skv, K, H).astype(v.dtype)
+    return dq, dk, dv, None, None      # no grads for kv_valid / qpos0
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, kv_valid=None,
+                    q_offset=0, block_q=512, block_k=512):
+    """Blocked attention; pads S to block multiples, masks the padding."""
+    B, Sq = q.shape[:2]
+    Skv = k.shape[1]
+    bq = min(block_q, max(16, Sq))
+    bk = min(block_k, max(16, Skv))
+    q, _ = _pad_to(q, 1, bq)
+    k, _ = _pad_to(k, 1, bk)
+    v, _ = _pad_to(v, 1, bk)
+    if k.shape[1] != Skv and kv_valid is None:
+        kv_valid = Skv
+    out = _flash(q, k, v, causal, window, kv_valid, q_offset, bq, bk)
+    return out[:, :Sq]
+
+
+# ------------------------------------------------------ attention layer ----
+
+_KV_Q_SCALE = 32.0    # int8 KV cache: fixed-point, ±4 range (post-RoPE K/V)
+
+
+def _cache_store(dtype):
+    """Writer into the KV cache; int8 caches quantize (fixed scale 1/32,
+    documented in DESIGN — halves/quarters decode HBM traffic)."""
+    def fn(x):
+        if jnp.dtype(dtype) == jnp.int8:
+            return jnp.clip(jnp.round(x.astype(jnp.float32) * _KV_Q_SCALE),
+                            -127, 127).astype(jnp.int8)
+        return x.astype(dtype)
+    return fn
+
+
+def _cache_load(c, compute_dtype):
+    if c.dtype == jnp.int8:
+        return (c.astype(compute_dtype)
+                * jnp.asarray(1.0 / _KV_Q_SCALE, compute_dtype))
+    return c
+
+
+def _axes_tuple(rule):
+    if rule is None:
+        return ()
+    return (rule,) if isinstance(rule, str) else tuple(rule)
+
+
+def seq_sharded_decode(q, ck, cv, pos, policy, compute_dtype):
+    """Sequence-parallel flash-decode (shard_map): the KV cache seq dim is
+    sharded over the mesh; each shard computes a local online-softmax
+    partial and the results combine with a cross-shard log-sum-exp — the
+    same math as flash combine across tiles, lifted to the mesh level.
+    Streams 1/n_shards of the cache per device with O(B·H·hd) comms.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = policy.mesh
+    seq_axes = _axes_tuple(policy.rules.get("cache_seq"))
+    n_sh = 1
+    for a in seq_axes:
+        n_sh *= mesh.shape[a]
+    S_loc = ck.shape[1] // n_sh
+
+    q_spec = policy.spec("batch", None, "kv_heads", "qgroup", "head_dim")
+    kv_spec = policy.spec("cache_batch", "cache_seq", "kv_heads", "head_dim")
+
+    def local(q_l, k_l, v_l):
+        rank = jnp.int32(0)
+        stride = 1
+        for a in reversed(seq_axes):
+            rank = rank + jax.lax.axis_index(a) * stride
+            stride *= mesh.shape[a]
+        local_valid = jnp.clip(pos + 1 - rank * S_loc, 0, S_loc)
+        k_l = _cache_load(k_l, compute_dtype)
+        v_l = _cache_load(v_l, compute_dtype)
+        qp, _ = _pad_to(q_l, 1, 16)
+        bk = min(512, S_loc)
+        out_l, lse_l = _flash_fwd_impl(qp, k_l, v_l, False, 0, local_valid,
+                                       0, 16, bk)
+        out_l = out_l[:, :1].astype(jnp.float32)       # (B,1,K,G,H)
+        lse_l = lse_l[..., :1]                         # (B,1,K,G,1)->(B,K,G,1)
+        lse_l = lse_l[:, 0, :, :, 0][:, None]          # (B,1,K,G)
+        m = lse_l
+        for a in seq_axes:
+            m = jax.lax.pmax(m, a)
+        w = jnp.exp(lse_l - m)
+        den = w
+        num = out_l * w[..., None]
+        for a in seq_axes:
+            den = jax.lax.psum(den, a)
+            num = jax.lax.psum(num, a)
+        return (num / jnp.maximum(den, 1e-30)[..., None]).astype(compute_dtype)
+
+    fn = shard_map(local, mesh=mesh,
+                   in_specs=(q_spec, kv_spec, kv_spec),
+                   out_specs=q_spec,
+                   check_rep=False)
+    return fn(q, ck, cv)
+
+
+def seq_sharded_cache_write(cache_arr, new_kv, pos, policy):
+    """Owner-computes write of one decode token into a seq-sharded cache:
+    the shard owning slot ``pos`` updates locally; everyone else no-ops.
+    Zero communication (vs the all-gather XLA SPMD would insert)."""
+    from jax.experimental.shard_map import shard_map
+
+    mesh = policy.mesh
+    seq_axes = _axes_tuple(policy.rules.get("cache_seq"))
+    n_sh = 1
+    for a in seq_axes:
+        n_sh *= mesh.shape[a]
+    S_loc = cache_arr.shape[1] // n_sh
+    kv_spec = policy.spec("cache_batch", "cache_seq", "kv_heads", "head_dim")
+    new_spec = policy.spec("cache_batch", None, "kv_heads", "head_dim")
+    store = _cache_store(cache_arr.dtype)
+
+    def write(c_l, kn):
+        rank = jnp.int32(0)
+        stride = 1
+        for a in reversed(seq_axes):
+            rank = rank + jax.lax.axis_index(a) * stride
+            stride *= mesh.shape[a]
+        lp = pos - rank * S_loc
+        mine = (lp >= 0) & (lp < S_loc)
+        lp_c = jnp.clip(lp, 0, S_loc - 1)
+        cur = jax.lax.dynamic_slice_in_dim(c_l, lp_c, 1, axis=1)
+        upd = jnp.where(mine, store(kn), cur)
+        return jax.lax.dynamic_update_slice_in_dim(c_l, upd, lp_c, axis=1)
+
+    fn = shard_map(write, mesh=mesh, in_specs=(kv_spec, new_spec),
+                   out_specs=kv_spec, check_rep=False)
+    return fn(cache_arr, new_kv)
+
+
+def attention(p, x, cfg: ArchConfig, *, causal=True, cache=None,
+              pos=None, cross_kv=None, rope_mode=None, window=None,
+              decode_ring=False):
+    """Full attention sub-layer: proj -> rope -> cache -> attend -> out proj.
+
+    cache: None | dict(k=(B,Smax,K,H), v=..., plus ring metadata).
+    pos: scalar int32 — current write offset (decode/prefill-with-cache).
+    cross_kv: (k, v) for encoder-decoder cross attention (skips self kv).
+    Returns (y, new_cache).
+    """
+    B, S, _ = x.shape
+    K, G, H = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads, cfg.hd
+    rope_mode = cfg.rope if rope_mode is None else rope_mode
+    window = cfg.sliding_window if window is None else window
+
+    q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"].astype(x.dtype))
+    q = shard(q, "batch", "attn_q_seq", "kv_heads", "qgroup", "head_dim")
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dkh->bskh", x, p["wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dkh->bskh", x, p["wv"].astype(x.dtype))
+        k = shard(k, "batch", None, "kv_heads", "head_dim")
+        v = shard(v, "batch", None, "kv_heads", "head_dim")
+    else:
+        k, v = cross_kv
+
+    positions = jnp.arange(S) + (0 if pos is None else pos)
+    q = rope_apply(q, positions, rope_mode)
+    if cross_kv is None:
+        k = rope_apply(k, positions, rope_mode)
+
+    new_cache = cache
+    kv_valid = None
+    q_offset = 0 if pos is None else pos
+    kpos = None
+    if cache is not None and cross_kv is None:
+        Smax = cache["k"].shape[1]
+        store = _cache_store(cache["k"].dtype)
+        if S > 1:
+            # Prefill: attend over the fresh K/V (pos must be 0 — chunked
+            # prefill is unsupported); write the cache for later decode.
+            with jax.named_scope("kv_cache_update"):
+                if Smax < S:                   # ring cache (SWA): keep tail
+                    assert window and S % Smax == 0, \
+                        "ring prefill needs S % window == 0"
+                    ck = store(k[:, -Smax:])
+                    cv = store(v[:, -Smax:])
+                else:
+                    ck = jax.lax.dynamic_update_slice(
+                        cache["k"], store(k), (0, 0, 0, 0))
+                    cv = jax.lax.dynamic_update_slice(
+                        cache["v"], store(v), (0, 0, 0, 0))
+                new_cache = dict(cache, k=ck, v=cv)
+        elif decode_ring and window:
+            # Ring buffer (SWA): slot s holds latest position ≡ s (mod Smax)
+            with jax.named_scope("kv_cache_update"):
+                slot = pos % Smax
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], store(k), (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], store(v), (0, slot, 0, 0))
+                new_cache = dict(cache, k=ck, v=cv)
+            slots = jnp.arange(Smax)
+            kp = (pos // Smax) * Smax + slots
+            kpos = jnp.where(kp > pos, kp - Smax, kp)
+            out = dense_attention(q, _cache_load(ck, x.dtype),
+                                  _cache_load(cv, x.dtype), causal=True,
+                                  window=window, q_offset=pos, kpos=kpos)
+            y = jnp.einsum("bskgh,kghd->bsd", out, p["wo"].astype(x.dtype))
+            return shard(y, "batch", "act_seq", "embed"), new_cache
+        else:
+            from repro.parallel.sharding import current_policy
+            pol = current_policy()
+            seq_sharded = (pol is not None and pol.mesh is not None
+                           and pol.rules.get("cache_seq"))
+            if seq_sharded:
+                # sequence-parallel decode: owner-computes write + local
+                # flash partials + cross-shard LSE combine (see above)
+                with jax.named_scope("kv_cache_update"):
+                    ck = seq_sharded_cache_write(cache["k"], k, pos, pol)
+                    cv = seq_sharded_cache_write(cache["v"], v, pos, pol)
+                    new_cache = dict(cache, k=ck, v=cv)
+                out = seq_sharded_decode(q, ck, cv, pos, pol, x.dtype)
+                out = shard(out, "batch", "act_seq", "kv_heads", "qgroup",
+                            "head_dim")
+                y = jnp.einsum("bskgh,kghd->bsd", out,
+                               p["wo"].astype(x.dtype))
+                if "bo" in p:
+                    y = y + p["bo"].astype(x.dtype)
+                return shard(y, "batch", "act_seq", "embed"), new_cache
+            with jax.named_scope("kv_cache_update"):
+                ck = jax.lax.dynamic_update_slice(
+                    cache["k"], store(k), (0, pos, 0, 0))
+                cv = jax.lax.dynamic_update_slice(
+                    cache["v"], store(v), (0, pos, 0, 0))
+                new_cache = dict(cache, k=ck, v=cv)
+            k, v = _cache_load(ck, x.dtype), _cache_load(cv, x.dtype)
+            kv_valid = pos + S
+
+    Skv = k.shape[1]
+    if max(S, Skv) <= 2048:
+        out = dense_attention(q, k, v, causal=causal, window=window,
+                              kv_valid=kv_valid, q_offset=q_offset)
+    else:
+        out = flash_attention(q, k, v, causal=causal, window=window,
+                              kv_valid=kv_valid, q_offset=q_offset)
+    out = shard(out, "batch", None, "kv_heads", "qgroup", "head_dim")
+    y = jnp.einsum("bskgh,kghd->bsd", out, p["wo"].astype(x.dtype))
+    if "bo" in p:
+        y = y + p["bo"].astype(x.dtype)
+    return shard(y, "batch", "act_seq", "embed"), new_cache
+
+
+def init_attention(b, name: str, cfg: ArchConfig, stack: int = 0,
+                   bias: bool = False):
+    d, K = cfg.d_model, cfg.num_kv_heads
+    G, H = cfg.num_heads // K, cfg.hd
+    # head-structured layouts: fan-in is d_model (q/k/v) resp. all head dims
+    # (o) — the builder's shape[-2] default would misread these
+    s_in = d ** -0.5
+    s_out = (K * G * H) ** -0.5
+    with b.scope(name):
+        b.add("wq", (d, K, G, H), ("embed", "kv_heads", "qgroup", "head_dim"),
+              scale=s_in, stack=stack)
+        b.add("wk", (d, K, H), ("embed", "kv_heads", "head_dim"),
+              scale=s_in, stack=stack)
+        b.add("wv", (d, K, H), ("embed", "kv_heads", "head_dim"),
+              scale=s_in, stack=stack)
+        b.add("wo", (K, G, H, d), ("kv_heads", "qgroup", "head_dim", "embed"),
+              scale=s_out, stack=stack)
+        if bias:
+            b.add("bo", (d,), ("embed",), init="zeros", stack=stack)
+
+
+def make_kv_cache(cfg: ArchConfig, batch: int, max_len: int, layers: int,
+                  dtype=jnp.bfloat16, ring_window: int = 0):
+    """Abstract-friendly KV cache pytree, stacked over layers."""
+    size = min(max_len, ring_window) if ring_window else max_len
+    shape = (layers, batch, size, cfg.num_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

@@ -1,0 +1,137 @@
+"""Shared layers: norms, MLPs, RoPE, embeddings. Pure functions over pytrees."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.parallel.sharding import shard
+
+
+def norm(p, x: jax.Array, kind: str) -> jax.Array:
+    """RMSNorm / LayerNorm with fp32 statistics."""
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(kind)
+    return y.astype(x.dtype)
+
+
+def init_norm(b, name: str, d: int, kind: str, stack: int = 0):
+    with b.scope(name):
+        b.add("scale", (d,), ("embed",), init="ones", stack=stack)
+        if kind == "layernorm":
+            b.add("bias", (d,), ("embed",), init="zeros", stack=stack)
+
+
+def mlp(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    """SwiGLU or (biased) GELU MLP, TP-sharded on d_ff."""
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(x.dtype))
+        h = jax.nn.gelu(h + p["b_up"].astype(x.dtype))
+    h = shard(h, "batch", None, "mlp")
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(x.dtype))
+    if "b_down" in p:
+        y = y + p["b_down"].astype(x.dtype)
+    return shard(y, "batch", "act_seq", "embed")
+
+
+def init_mlp(b, name: str, cfg: ArchConfig, stack: int = 0):
+    d, f = cfg.d_model, cfg.d_ff
+    with b.scope(name):
+        if cfg.mlp == "swiglu":
+            b.add("w_gate", (d, f), ("embed", "mlp"), stack=stack)
+            b.add("w_up", (d, f), ("embed", "mlp"), stack=stack)
+        else:
+            b.add("w_up", (d, f), ("embed", "mlp"), stack=stack)
+            b.add("b_up", (f,), ("mlp",), init="zeros", stack=stack)
+            b.add("b_down", (d,), ("embed",), init="zeros", stack=stack)
+        b.add("w_down", (f, d), ("mlp", "embed"), stack=stack)
+
+
+# ---------------------------------------------------------------- RoPE -----
+
+def rope_freqs(head_dim: int, mode: str, base: float = 10000.0) -> jax.Array:
+    """Inverse frequencies. mode="half" (GLM 2d-RoPE) rotates only the first
+    half of the head dims."""
+    rot = head_dim if mode == "full" else head_dim // 2
+    return 1.0 / (base ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def rope_apply(x: jax.Array, positions: jax.Array, mode: str,
+               base: float = 10000.0) -> jax.Array:
+    """x: (..., S, *head_dims, head_dim); positions: (S,) or (B, S)."""
+    if mode == "none":
+        return x
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, mode, base)
+    ang = positions[..., None].astype(jnp.float32) * inv          # (..., S, rot/2)
+    # insert singleton axes for the head dims between S and head_dim
+    n_mid = x.ndim - ang.ndim - 1
+    ang = ang.reshape(ang.shape[:-1] + (1,) * n_mid + ang.shape[-1:])
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    rot = hd if mode == "full" else hd // 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1) if mode == "half" \
+        else yr.astype(x.dtype)
+
+
+# ---------------------------------------------------------- Embeddings -----
+
+def embed(p, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    e = jnp.take(p["embedding"], tokens, axis=0).astype(cfg.adtype)
+    return shard(e, "batch", "act_seq", "embed")
+
+
+def unembed(p_root, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = p_root["embed"]["embedding"].astype(x.dtype).T
+    else:
+        w = p_root["unembed"]["w"].astype(x.dtype)
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return shard(logits, "batch", "logit_seq", "vocab")
+
+
+def init_embeddings(b, cfg: ArchConfig):
+    with b.scope("embed"):
+        b.add("embedding", (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+              scale=0.02)
+    if not cfg.tie_embeddings:
+        with b.scope("unembed"):
+            b.add("w", (cfg.d_model, cfg.vocab_size), ("embed", "vocab"))
+    if cfg.rope == "none" and cfg.max_position_embeddings:
+        with b.scope("pos_embed"):
+            b.add("embedding", (cfg.max_position_embeddings, cfg.d_model),
+                  (None, "embed"), scale=0.02)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token cross-entropy in fp32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

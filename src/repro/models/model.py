@@ -1,0 +1,309 @@
+"""Model API: build_model(cfg) -> Model with init/forward/loss/prefill/decode,
+abstract parameter/cache templates (for AOT dry-runs) and logical-axis trees
+(for shardings). Everything is family-dispatched here; the rest of the
+framework only sees this interface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models import xlstm as xl
+from repro.models.layers import (cross_entropy, embed, init_embeddings, norm,
+                                 init_norm, unembed)
+from repro.models.params import ParamBuilder
+from repro.models.ssm import SSMConfig
+from repro.parallel.sharding import shard
+
+Pytree = Any
+
+
+# ------------------------------------------------------------ init ---------
+
+def init_arch(b: ParamBuilder, cfg: ArchConfig):
+    init_embeddings(b, cfg)
+    if cfg.family in ("dense", "moe", "vlm"):
+        with b.scope("layers"):
+            tf.init_transformer_block(b, cfg, stack=cfg.num_layers)
+    elif cfg.family == "audio":
+        tf.init_whisper(b, cfg)
+    elif cfg.family == "ssm":
+        tf.init_xlstm(b, cfg)
+    elif cfg.family == "hybrid":
+        tf.init_zamba(b, cfg)
+    else:
+        raise ValueError(cfg.family)
+    init_norm(b, "ln_f", cfg.d_model, cfg.norm)
+
+
+# ----------------------------------------------------- cache templates -----
+
+def _kv_shape(cfg, layers, batch, seq):
+    return (layers, batch, seq, cfg.num_kv_heads, cfg.hd)
+
+KV_AXES = ("layers", "cache_batch", "cache_seq", "kv_heads", "head_dim")
+
+
+def cache_template(cfg: ArchConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16) -> Tuple[Pytree, Pytree]:
+    """Returns (spec_tree of ShapeDtypeStruct, axes_tree of tuples)."""
+    S = jax.ShapeDtypeStruct
+    if cfg.family in ("dense", "moe", "vlm"):
+        seq = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        sh = _kv_shape(cfg, cfg.num_layers, batch, seq)
+        spec = {"k": S(sh, dtype), "v": S(sh, dtype)}
+        axes = {"k": KV_AXES, "v": KV_AXES}
+        return spec, axes
+    if cfg.family == "audio":
+        sh = _kv_shape(cfg, cfg.num_layers, batch, max_len)
+        xh = _kv_shape(cfg, cfg.num_layers, batch, cfg.encoder_seq)
+        # cross-attention KV keeps its own (non-shardable, 1500-frame) axis
+        x_axes = ("layers", "cache_batch", "cross_seq", "kv_heads",
+                  "head_dim")
+        spec = {"k": S(sh, dtype), "v": S(sh, dtype),
+                "xk": S(xh, dtype), "xv": S(xh, dtype)}
+        axes = {"k": KV_AXES, "v": KV_AXES, "xk": x_axes, "xv": x_axes}
+        return spec, axes
+    if cfg.family == "ssm":
+        d_inner = 2 * cfg.d_model
+        H = cfg.num_heads
+        Dm = d_inner // H
+        Ds = cfg.d_model // H
+        spec, axes = {}, {}
+        for i in range(cfg.num_layers):
+            key = f"block_{i}"
+            if i in cfg.slstm_at:
+                st = (batch, H, Ds)
+                spec[key] = {n: S(st, jnp.float32) for n in ("h", "c", "n", "m")}
+                axes[key] = {n: ("cache_batch", "ssm_heads", None)
+                             for n in ("h", "c", "n", "m")}
+            else:
+                spec[key] = {
+                    "conv": S((batch, 3, d_inner), dtype),
+                    "C": S((batch, H, Dm, Dm), jnp.float32),
+                    "n": S((batch, H, Dm), jnp.float32),
+                    "m": S((batch, H), jnp.float32),
+                }
+                axes[key] = {
+                    "conv": ("cache_batch", None, "ssm_inner"),
+                    "C": ("cache_batch", "ssm_heads", None, None),
+                    "n": ("cache_batch", "ssm_heads", None),
+                    "m": ("cache_batch", "ssm_heads"),
+                }
+        return spec, axes
+    if cfg.family == "hybrid":
+        n_units, m_per, tail = tf.zamba_layout(cfg)
+        s_cfg = cfg.ssm or SSMConfig()
+        d_inner = s_cfg.expand * cfg.d_model
+        H = s_cfg.num_heads or d_inner // s_cfg.head_dim
+        P, N, W1 = s_cfg.head_dim, s_cfg.state_dim, s_cfg.conv_width - 1
+
+        def mamba_spec(*lead):
+            la = (None,) * len(lead)
+            sp = {
+                "conv_x": S(lead + (batch, W1, d_inner), dtype),
+                "conv_B": S(lead + (batch, W1, N), dtype),
+                "conv_C": S(lead + (batch, W1, N), dtype),
+                "ssm": S(lead + (batch, H, P, N), jnp.float32),
+            }
+            ax = {
+                "conv_x": la + ("cache_batch", None, "ssm_inner"),
+                "conv_B": la + ("cache_batch", None, "ssm_state"),
+                "conv_C": la + ("cache_batch", None, "ssm_state"),
+                "ssm": la + ("cache_batch", "ssm_heads", None, None),
+            }
+            return sp, ax
+
+        mu_s, mu_a = mamba_spec(n_units, m_per)
+        sh = _kv_shape(cfg, n_units, batch, max_len)
+        spec = {"mamba_units": mu_s,
+                "attn": {"k": S(sh, dtype), "v": S(sh, dtype)}}
+        axes = {"mamba_units": mu_a,
+                "attn": {"k": KV_AXES, "v": KV_AXES}}
+        if tail:
+            mt_s, mt_a = mamba_spec(tail)
+            spec["mamba_tail"] = mt_s
+            axes["mamba_tail"] = mt_a
+        return spec, axes
+    raise ValueError(cfg.family)
+
+
+def zeros_like_spec(spec: Pytree) -> Pytree:
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+# ------------------------------------------------------------ forward ------
+
+def _decoder_inputs(params, batch, cfg: ArchConfig, pos):
+    """Token embeddings (+ modality overlays, + learned positions)."""
+    x = embed(params["embed"], batch["tokens"], cfg)
+    if cfg.family == "vlm" and "image_embeds" in batch:
+        img = batch["image_embeds"].astype(x.dtype)
+        x = jax.lax.dynamic_update_slice(x, img, (0, 0, 0))
+    if cfg.rope == "none" and cfg.max_position_embeddings:
+        S = x.shape[1]
+        table = params["pos_embed"]["embedding"]
+        p0 = 0 if pos is None else pos
+        pe = jax.lax.dynamic_slice_in_dim(table, p0, S, axis=0)
+        x = x + pe.astype(x.dtype)
+    return shard(x, "batch", "act_seq", "embed")
+
+
+def forward(params, batch: Dict, cfg: ArchConfig, *, kind="train",
+            cache=None, pos=None, last_only=False):
+    """Returns (logits, new_cache, aux). For last_only, logits are (B,1,V)."""
+    decode_ring = bool(cfg.sliding_window) and cache is not None and \
+        cfg.family in ("dense", "moe", "vlm")
+    x = _decoder_inputs(params, batch, cfg, pos)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        x, new_cache, aux = tf.dense_stack(
+            params["layers"], x, cfg, cache=cache, pos=pos, kind=kind,
+            decode_ring=decode_ring)
+    elif cfg.family == "audio":
+        if cache is not None and "frames" not in batch:
+            xk, xv = cache["xk"], cache["xv"]          # decode: cached cross-KV
+        else:
+            enc = tf.whisper_encoder(params, batch["frames"], cfg, kind=kind)
+            xk, xv = tf.whisper_cross_kv(params, enc, cfg)
+        self_cache = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+        x, new_self = tf.whisper_decoder(params, x, cfg, (xk, xv),
+                                         cache=self_cache, pos=pos, kind=kind)
+        new_cache = None if cache is None else \
+            {"k": new_self["k"], "v": new_self["v"], "xk": xk, "xv": xv}
+        aux = jnp.float32(0)
+    elif cfg.family == "ssm":
+        x, new_cache = tf.xlstm_stack(params, x, cfg, state=cache, kind=kind)
+        aux = jnp.float32(0)
+    elif cfg.family == "hybrid":
+        x, new_cache, aux = tf.zamba_stack(params, x, cfg, cache=cache,
+                                           pos=pos, kind=kind)
+    else:
+        raise ValueError(cfg.family)
+
+    x = norm(params["ln_f"], x, cfg.norm)
+    if last_only:
+        x = x[:, -1:]
+    logits = unembed(params, x, cfg)
+    return logits, new_cache, aux
+
+
+# ------------------------------------------------------------- Model -------
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    # -- parameters --
+    def init(self, rng) -> Pytree:
+        b = ParamBuilder(rng, self.cfg.pdtype)
+        init_arch(b, self.cfg)
+        return b.params
+
+    def abstract(self) -> Tuple[Pytree, Pytree]:
+        """(abstract param pytree, logical-axes pytree) — no allocation."""
+        holder = {}
+
+        def f():
+            b = ParamBuilder(jax.random.PRNGKey(0), self.cfg.pdtype)
+            init_arch(b, self.cfg)
+            holder["axes"] = b.axes
+            return b.params
+
+        abs_params = jax.eval_shape(f)
+        return abs_params, holder["axes"]
+
+    # -- training --
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict]:
+        logits, _, aux = forward(params, batch, self.cfg, kind="train")
+        mask = batch.get("mask")
+        if self.cfg.family == "vlm" and mask is None:
+            S = batch["tokens"].shape[1]
+            mask = jnp.broadcast_to(
+                (jnp.arange(S) >= self.cfg.num_image_tokens)[None],
+                batch["labels"].shape)
+        ce = cross_entropy(logits, batch["labels"], mask)
+        loss = ce + 0.01 * aux
+        return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+    # -- serving --
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16):
+        spec, _ = cache_template(self.cfg, batch, max_len, dtype)
+        return zeros_like_spec(spec)
+
+    def prefill(self, params, batch, cache):
+        """Populate cache from a full prompt; logits for the LAST position."""
+        logits, new_cache, _ = forward(params, batch, self.cfg, kind="prefill",
+                                       cache=cache, pos=0, last_only=True)
+        return logits, new_cache
+
+    def decode_step(self, params, tokens, cache, pos):
+        """tokens: (B,1) int32; pos: scalar int32 — current write position."""
+        logits, new_cache, _ = forward(params, {"tokens": tokens}, self.cfg,
+                                       kind="decode", cache=cache, pos=pos)
+        return logits, new_cache
+
+    # -- dry-run specs --
+    def input_specs(self, shape: ShapeConfig, dtype=jnp.bfloat16,
+                    cache_dtype=None) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins + logical axes for every model input."""
+        S = jax.ShapeDtypeStruct
+        cfg = self.cfg
+        B, L = shape.global_batch, shape.seq_len
+        # grad-accumulation: train inputs arrive pre-split (n_micro, mb, ...)
+        # so no resharding is needed inside the step
+        mb = shape.microbatch if (shape.kind == "train" and shape.microbatch
+                                  and shape.microbatch < B) else 0
+        lead = (B // mb, mb) if mb else (B,)
+        lax = ((None, "batch") if mb else ("batch",))
+
+        def toks(s):
+            return (S(lead + (s,), jnp.int32), lax + (None,))
+
+        out: Dict[str, Any] = {}
+        if shape.kind == "train":
+            out["tokens"] = toks(L)
+            out["labels"] = toks(L)
+        elif shape.kind == "prefill":
+            out["tokens"] = toks(L)
+        else:                                        # decode
+            out["tokens"] = (S((B, 1), jnp.int32), ("batch", None))
+            out["pos"] = (S((), jnp.int32), ())
+        if cfg.family == "audio" and shape.kind in ("train", "prefill"):
+            out["frames"] = (S(lead + (cfg.encoder_seq, cfg.d_model), dtype),
+                             lax + (None, "embed"))
+        if cfg.family == "vlm" and shape.kind in ("train", "prefill"):
+            out["image_embeds"] = (S(lead + (cfg.num_image_tokens,
+                                             cfg.d_model), dtype),
+                                   lax + (None, "embed"))
+        if shape.kind in ("prefill", "decode"):
+            spec, axes = cache_template(cfg, B, L, cache_dtype or dtype)
+            out["cache"] = (spec, axes)
+        return out
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+def abstract_params(cfg: ArchConfig):
+    return build_model(cfg).abstract()
+
+
+def count_params(cfg: ArchConfig) -> int:
+    abs_p, _ = abstract_params(cfg)
+    return int(sum(x.size for x in jax.tree.leaves(abs_p)))
+
+
+def param_partition_specs(cfg: ArchConfig, policy):
+    """PartitionSpec pytree for params under a ShardingPolicy (incl. FSDP)."""
+    from repro.parallel.sharding import fsdp_param_spec
+    abs_p, axes = abstract_params(cfg)
+    return jax.tree.map(
+        lambda leaf, ax: fsdp_param_spec(policy, ax, leaf.shape),
+        abs_p, axes, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))

@@ -1,0 +1,84 @@
+"""Parameter construction with logical-axis tracking.
+
+``ParamBuilder`` creates (nested-dict) parameter pytrees while recording, at
+the same code site, the logical axes of every leaf — one code path for both
+values and shardings, so they cannot drift apart. ``AxisTree`` mirrors the
+param pytree with tuples of logical axis names.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Axes = Tuple[Optional[str], ...]
+
+
+class ParamBuilder:
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+        self.params: Dict = {}
+        self.axes: Dict = {}
+        self._path = []
+
+    @contextlib.contextmanager
+    def scope(self, name: str):
+        self._path.append(name)
+        try:
+            yield self
+        finally:
+            self._path.pop()
+
+    def _enter(self, tree: Dict) -> Dict:
+        node = tree
+        for p in self._path:
+            node = node.setdefault(p, {})
+        return node
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def add(self, name: str, shape: Tuple[int, ...], axes: Axes,
+            init: str = "normal", scale: Optional[float] = None,
+            stack: int = 0) -> jax.Array:
+        """Create one parameter. ``stack`` prepends a scan-stacked layer dim
+        (axes gets "layers" prepended)."""
+        if stack:
+            shape = (stack,) + tuple(shape)
+            axes = ("layers",) + tuple(axes)
+        assert len(shape) == len(axes), (name, shape, axes)
+        if init == "zeros":
+            val = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, self.dtype)
+        elif init == "normal":
+            if scale is None:
+                fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+                scale = 1.0 / math.sqrt(max(1, fan_in))
+            val = (jax.random.normal(self._next_key(), shape, jnp.float32)
+                   * scale).astype(self.dtype)
+        elif init == "const":
+            val = jnp.full(shape, scale, self.dtype)
+        else:
+            raise ValueError(init)
+        self._enter(self.params)[name] = val
+        self._enter(self.axes)[name] = tuple(axes)
+        return val
+
+
+def tree_axes_flatten(axes_tree) -> Dict[str, Axes]:
+    flat = {}
+
+    def rec(node, path):
+        if isinstance(node, dict):
+            for k, v in node.items():
+                rec(v, path + (k,))
+        else:
+            flat["/".join(path)] = node
+    rec(axes_tree, ())
+    return flat

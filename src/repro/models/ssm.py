@@ -1,0 +1,216 @@
+"""Mamba2 (SSD) block — chunked parallel scan for train/prefill, O(1)-state
+recurrence for decode. Follows the minimal-SSD formulation of the Mamba2
+paper (scalar-identity A per head, groups=1), TPU-adapted: the chunked
+intra/inter decomposition maps chunk-local work onto MXU matmuls and the
+inter-chunk recurrence onto a short ``lax.scan`` (S/chunk steps).
+
+Projections are kept as separate weights (z / x / B / C / dt) rather than one
+packed in-proj so each output dim carries a clean sharding (d_inner and heads
+shard over "model"; the tiny N=64 state dims stay replicated).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.parallel.sharding import shard
+
+
+def _segsum(a):
+    """a: (..., Q) log-decays -> (..., Q, Q) with sum_{j+1..i}, -inf above diag."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def _pick_chunk(S: int, chunk: int) -> int:
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    return c
+
+
+@jax.named_scope("ssd_chunk")
+def ssd_chunked(x, a, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD.
+
+    x: (B, S, H, P) inputs (already multiplied by dt)
+    a: (B, S, H) log decay (dt * A, negative)
+    Bm, Cm: (B, S, N) input/output projections (groups=1, broadcast over H)
+    Returns (y (B,S,H,P), final_state (B,H,P,N) fp32).
+    """
+    b, s, h, p = x.shape
+    n = Bm.shape[-1]
+    Q = _pick_chunk(s, chunk)
+    nc = s // Q
+    xc = x.reshape(b, nc, Q, h, p)
+    ac = a.reshape(b, nc, Q, h).transpose(0, 3, 1, 2)          # (b,h,nc,Q)
+    Bc = Bm.reshape(b, nc, Q, n)
+    Cc = Cm.reshape(b, nc, Q, n)
+
+    a_cs = jnp.cumsum(ac, axis=-1)                             # (b,h,nc,Q)
+    L = jnp.exp(_segsum(ac))                                   # (b,h,nc,Q,Q)
+
+    # 1. intra-chunk (diagonal blocks): scores[l,s] = (C_l . B_s) * L[l,s]
+    cb = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)                 # (b,nc,Q,Q)
+    y_diag = jnp.einsum("bcls,bhcls,bcshp->bclhp", cb, L, xc)
+
+    # 2. chunk summary states with decay from position to chunk end
+    decay_to_end = jnp.exp(a_cs[..., -1:] - a_cs)              # (b,h,nc,Q)
+    states = jnp.einsum("bcsn,bhcs,bcshp->bchpn", Bc, decay_to_end, xc)
+
+    # 3. inter-chunk recurrence (sequential over nc chunks)
+    chunk_decay = jnp.exp(a_cs[..., -1])                       # (b,h,nc)
+
+    def step(carry, inp):
+        st_c, dec_c = inp                                      # (b,h,p,n),(b,h)
+        new = carry * dec_c[..., None, None] + st_c
+        return new, carry                                      # emit PREV state
+
+    init = jnp.zeros((b, h, p, n), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),  # (nc,b,h,p,n)
+         chunk_decay.transpose(2, 0, 1)))                      # (nc,b,h)
+    prev_states = prev_states.transpose(1, 2, 0, 3, 4)         # (b,h,nc,p,n)
+
+    # 4. off-diagonal: C_l . prev_state, decayed from chunk start
+    state_decay = jnp.exp(a_cs)                                # (b,h,nc,Q)
+    y_off = jnp.einsum("bcln,bhcpn,bhcl->bclhp",
+                       Cc, prev_states, state_decay)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode(x, a, Bm, Cm, state):
+    """Single-token SSD recurrence.
+
+    x: (B, 1, H, P) (already * dt); a: (B, 1, H) log decay;
+    Bm, Cm: (B, 1, N); state: (B, H, P, N) fp32.
+    """
+    dA = jnp.exp(a[:, 0].astype(jnp.float32))                  # (B,H)
+    upd = jnp.einsum("bhp,bn->bhpn", x[:, 0].astype(jnp.float32),
+                     Bm[:, 0].astype(jnp.float32))
+    new_state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, Cm[:, 0].astype(jnp.float32))
+    return y[:, None].astype(x.dtype), new_state
+
+
+def _depthwise_conv(x, w, b, state=None):
+    """Causal depthwise conv, width W. x: (B,S,D), w: (W,D), b: (D,).
+    state: (B, W-1, D) trailing past inputs for decode/chunked prefill."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    new_state = xp[:, -(W - 1):] if W > 1 else jnp.zeros_like(x[:, :0])
+    return y.astype(x.dtype), new_state
+
+
+def mamba_block(p, x, cfg: ArchConfig, state: Optional[dict] = None):
+    """Mamba2 block. x: (B,S,d).
+    state: None | dict(conv_x/conv_B/conv_C, ssm=(B,H,P,N) fp32).
+    Returns (y, new_state) — state always returned (prefill populates it).
+    """
+    s_cfg = cfg.ssm or SSMConfig()
+    B_, S, d = x.shape
+    d_inner = s_cfg.expand * d
+    P = s_cfg.head_dim
+    H = s_cfg.num_heads or d_inner // P
+
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(x.dtype))
+    z = shard(z, "batch", None, "ssm_inner")
+    xi = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(x.dtype))
+    Bi = jnp.einsum("bsd,dn->bsn", x, p["w_B"].astype(x.dtype))
+    Ci = jnp.einsum("bsd,dn->bsn", x, p["w_C"].astype(x.dtype))
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["w_dt"].astype(x.dtype))
+
+    st = state or {}
+    xs, st_x = _depthwise_conv(xi, p["conv_x_w"].astype(x.dtype),
+                               p["conv_x_b"].astype(x.dtype), st.get("conv_x"))
+    Bm, st_B = _depthwise_conv(Bi, p["conv_B_w"].astype(x.dtype),
+                               p["conv_B_b"].astype(x.dtype), st.get("conv_B"))
+    Cm, st_C = _depthwise_conv(Ci, p["conv_C_w"].astype(x.dtype),
+                               p["conv_C_b"].astype(x.dtype), st.get("conv_C"))
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    xs = shard(xs, "batch", None, "ssm_inner")
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))    # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                # (H,)
+    a = dt * A                                                  # log decay
+    xh = xs.reshape(B_, S, H, P)
+    xbar = xh * dt[..., None].astype(x.dtype)
+
+    if state is None or S > 1:
+        y, ssm_state = ssd_chunked(xbar, a, Bm, Cm, s_cfg.chunk,
+                                   init_state=st.get("ssm"))
+    else:
+        y, ssm_state = ssd_decode(xbar, a, Bm, Cm, st["ssm"])
+
+    y = y + xh * p["D"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(B_, S, d_inner)
+    # gated RMSNorm (Mamba2)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(jnp.float32)
+    y = yf.astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(x.dtype))
+    out = shard(out, "batch", "act_seq", "embed")
+    new_state = {"conv_x": st_x, "conv_B": st_B, "conv_C": st_C,
+                 "ssm": ssm_state}
+    return out, new_state
+
+
+def init_mamba(b, name: str, cfg: ArchConfig, stack: int = 0):
+    s_cfg = cfg.ssm or SSMConfig()
+    d = cfg.d_model
+    d_inner = s_cfg.expand * d
+    P = s_cfg.head_dim
+    H = s_cfg.num_heads or d_inner // P
+    N = s_cfg.state_dim
+    W = s_cfg.conv_width
+    with b.scope(name):
+        b.add("w_z", (d, d_inner), ("embed", "ssm_inner"), stack=stack)
+        b.add("w_x", (d, d_inner), ("embed", "ssm_inner"), stack=stack)
+        b.add("w_B", (d, N), ("embed", "ssm_state"), stack=stack)
+        b.add("w_C", (d, N), ("embed", "ssm_state"), stack=stack)
+        b.add("w_dt", (d, H), ("embed", "ssm_heads"), stack=stack)
+        b.add("conv_x_w", (W, d_inner), ("conv_width", "ssm_inner"),
+              init="normal", scale=0.2, stack=stack)
+        b.add("conv_x_b", (d_inner,), ("ssm_inner",), init="zeros", stack=stack)
+        b.add("conv_B_w", (W, N), ("conv_width", "ssm_state"),
+              init="normal", scale=0.2, stack=stack)
+        b.add("conv_B_b", (N,), ("ssm_state",), init="zeros", stack=stack)
+        b.add("conv_C_w", (W, N), ("conv_width", "ssm_state"),
+              init="normal", scale=0.2, stack=stack)
+        b.add("conv_C_b", (N,), ("ssm_state",), init="zeros", stack=stack)
+        b.add("dt_bias", (H,), ("ssm_heads",), init="zeros", stack=stack)
+        b.add("A_log", (H,), ("ssm_heads",), init="zeros", stack=stack)
+        b.add("D", (H,), ("ssm_heads",), init="ones", stack=stack)
+        b.add("norm_scale", (d_inner,), ("ssm_inner",), init="ones", stack=stack)
+        b.add("w_out", (d_inner, d), ("ssm_inner", "embed"), stack=stack)
+
+
+def make_mamba_state(cfg: ArchConfig, batch: int, layers: int,
+                     dtype=jnp.bfloat16):
+    s_cfg = cfg.ssm or SSMConfig()
+    d_inner = s_cfg.expand * cfg.d_model
+    P = s_cfg.head_dim
+    H = s_cfg.num_heads or d_inner // P
+    N = s_cfg.state_dim
+    W1 = s_cfg.conv_width - 1
+    return {
+        "conv_x": jnp.zeros((layers, batch, W1, d_inner), dtype),
+        "conv_B": jnp.zeros((layers, batch, W1, N), dtype),
+        "conv_C": jnp.zeros((layers, batch, W1, N), dtype),
+        "ssm": jnp.zeros((layers, batch, H, P, N), jnp.float32),
+    }

@@ -1,0 +1,269 @@
+"""Per-family model stacks: dense/MoE/VLM decoder, whisper enc-dec,
+xLSTM stack, Zamba2 hybrid (Mamba2 + shared attention block).
+
+All deep stacks scan over layers with stacked parameters so the HLO stays
+O(1) in depth (essential for 126-layer AOT compiles); training wraps the
+scan body in ``jax.checkpoint`` (full per-layer remat).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import xlstm as xl
+from repro.models.attention import attention, init_attention
+from repro.models.layers import init_mlp, init_norm, mlp, norm
+from repro.models.moe import init_moe, moe_mlp
+from repro.models.ssm import init_mamba, mamba_block
+from repro.parallel.sharding import shard
+
+
+def _maybe_ckpt(fn, cfg: ArchConfig, kind: str):
+    return jax.checkpoint(fn) if (cfg.remat and kind == "train") else fn
+
+
+# ----------------------------------------------------- transformer block ---
+
+def transformer_block(p, x, cfg: ArchConfig, *, causal=True, cache=None,
+                      pos=None, kind="train", decode_ring=False):
+    h = norm(p["ln1"], x, cfg.norm)
+    a, new_cache = attention(p["attn"], h, cfg, causal=causal, cache=cache,
+                             pos=pos, decode_ring=decode_ring)
+    x = x + a
+    h = norm(p["ln2"], x, cfg.norm)
+    if cfg.moe is not None:
+        y, aux = moe_mlp(p["moe"], h, cfg)
+    else:
+        y, aux = mlp(p["mlp"], h, cfg), jnp.float32(0)
+    return x + y, new_cache, aux
+
+
+def init_transformer_block(b, cfg: ArchConfig, stack: int = 0):
+    init_norm(b, "ln1", cfg.d_model, cfg.norm, stack=stack)
+    init_attention(b, "attn", cfg, stack=stack)
+    init_norm(b, "ln2", cfg.d_model, cfg.norm, stack=stack)
+    if cfg.moe is not None:
+        init_moe(b, "moe", cfg, stack=stack)
+    else:
+        init_mlp(b, "mlp", cfg, stack=stack)
+
+
+def dense_stack(p_stack, x, cfg: ArchConfig, cache=None, pos=None,
+                kind="train", causal=True, decode_ring=False):
+    """Scan over stacked transformer blocks. cache: pytree with leading L dim."""
+    def body(carry, xs):
+        xx, aux = carry
+        if cache is not None:
+            p_l, c_l = xs
+        else:
+            p_l, c_l = xs, None
+        xx, new_c, a = transformer_block(
+            p_l, xx, cfg, causal=causal, cache=c_l, pos=pos, kind=kind,
+            decode_ring=decode_ring)
+        return (xx, aux + a), new_c
+
+    body = _maybe_ckpt(body, cfg, kind)
+    xs = (p_stack, cache) if cache is not None else p_stack
+    (x, aux), new_cache = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+    return x, new_cache, aux
+
+
+# ------------------------------------------------------------- whisper -----
+
+def whisper_encoder(p, frames, cfg: ArchConfig, kind="train"):
+    """frames: (B, T, d) precomputed conv-frontend embeddings (STUB)."""
+    T = frames.shape[1]
+    x = frames.astype(cfg.adtype) \
+        + p["enc_pos"]["embedding"][:T].astype(cfg.adtype)
+    x = shard(x, "batch", "act_seq", "embed")
+
+    def body(carry, p_l):
+        xx, _ = carry
+        h = norm(p_l["ln1"], xx, cfg.norm)
+        a, _ = attention(p_l["attn"], h, cfg, causal=False)
+        xx = xx + a
+        h = norm(p_l["ln2"], xx, cfg.norm)
+        xx = xx + mlp(p_l["mlp"], h, cfg)
+        return (xx, jnp.float32(0)), None
+
+    body = _maybe_ckpt(body, cfg, kind)
+    (x, _), _ = jax.lax.scan(body, (x, jnp.float32(0)), p["enc_layers"])
+    return norm(p["enc_ln_f"], x, cfg.norm)
+
+
+def whisper_cross_kv(p, enc_out, cfg: ArchConfig):
+    """Per-decoder-layer cross K/V from encoder output: (L,B,T,K,H) each."""
+    def body(_, p_l):
+        k = jnp.einsum("btd,dkh->btkh", enc_out,
+                       p_l["xattn"]["wk"].astype(enc_out.dtype))
+        v = jnp.einsum("btd,dkh->btkh", enc_out,
+                       p_l["xattn"]["wv"].astype(enc_out.dtype))
+        return None, (k, v)
+    _, (xk, xv) = jax.lax.scan(body, None, p["dec_layers"])
+    return xk, xv
+
+
+def whisper_decoder_block(p_l, x, cfg: ArchConfig, cross_kv, cache=None,
+                          pos=None, kind="train"):
+    h = norm(p_l["ln1"], x, cfg.norm)
+    a, new_cache = attention(p_l["attn"], h, cfg, causal=True, cache=cache,
+                             pos=pos, rope_mode="none")
+    x = x + a
+    h = norm(p_l["lnx"], x, cfg.norm)
+    a, _ = attention(p_l["xattn"], h, cfg, causal=False, cross_kv=cross_kv,
+                     rope_mode="none")
+    x = x + a
+    h = norm(p_l["ln2"], x, cfg.norm)
+    return x + mlp(p_l["mlp"], h, cfg), new_cache
+
+
+def init_whisper(b, cfg: ArchConfig):
+    with b.scope("enc_pos"):
+        b.add("embedding", (cfg.encoder_seq, cfg.d_model), (None, "embed"),
+              scale=0.02)
+    with b.scope("enc_layers"):
+        init_norm(b, "ln1", cfg.d_model, cfg.norm, stack=cfg.encoder_layers)
+        init_attention(b, "attn", cfg, stack=cfg.encoder_layers, bias=True)
+        init_norm(b, "ln2", cfg.d_model, cfg.norm, stack=cfg.encoder_layers)
+        init_mlp(b, "mlp", cfg, stack=cfg.encoder_layers)
+    init_norm(b, "enc_ln_f", cfg.d_model, cfg.norm)
+    with b.scope("dec_layers"):
+        init_norm(b, "ln1", cfg.d_model, cfg.norm, stack=cfg.num_layers)
+        init_attention(b, "attn", cfg, stack=cfg.num_layers, bias=True)
+        init_norm(b, "lnx", cfg.d_model, cfg.norm, stack=cfg.num_layers)
+        init_attention(b, "xattn", cfg, stack=cfg.num_layers, bias=True)
+        init_norm(b, "ln2", cfg.d_model, cfg.norm, stack=cfg.num_layers)
+        init_mlp(b, "mlp", cfg, stack=cfg.num_layers)
+
+
+def whisper_decoder(p, x, cfg: ArchConfig, cross_kv, cache=None, pos=None,
+                    kind="train"):
+    """cross_kv: (xk, xv) stacked (L,B,T,K,H)."""
+    xk, xv = cross_kv
+
+    def body(carry, xs):
+        xx, _ = carry
+        if cache is not None:
+            p_l, xk_l, xv_l, c_l = xs
+        else:
+            p_l, xk_l, xv_l = xs
+            c_l = None
+        xx, new_c = whisper_decoder_block(p_l, xx, cfg, (xk_l, xv_l),
+                                          cache=c_l, pos=pos, kind=kind)
+        return (xx, jnp.float32(0)), new_c
+
+    body = _maybe_ckpt(body, cfg, kind)
+    xs = (p["dec_layers"], xk, xv) + ((cache,) if cache is not None else ())
+    (x, _), new_cache = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+    return x, new_cache
+
+
+# --------------------------------------------------------------- xLSTM -----
+
+def xlstm_stack(p, x, cfg: ArchConfig, state=None, kind="train"):
+    """Unrolled (L=12 is small). state: dict block_i -> block state."""
+    new_state = {}
+    for i in range(cfg.num_layers):
+        key = f"block_{i}"
+        p_b = p[key]
+        st = None if state is None else state[key]
+        h = norm(p_b["ln"], x, "layernorm")
+        if i in cfg.slstm_at:
+            y, st2 = xl.slstm_block(p_b["cell"], h, cfg, st)
+        else:
+            y, st2 = xl.mlstm_block(p_b["cell"], h, cfg, st)
+        x = x + y
+        new_state[key] = st2
+    return x, new_state
+
+
+def init_xlstm(b, cfg: ArchConfig):
+    for i in range(cfg.num_layers):
+        with b.scope(f"block_{i}"):
+            init_norm(b, "ln", cfg.d_model, "layernorm")
+            if i in cfg.slstm_at:
+                xl.init_slstm(b, "cell", cfg)
+            else:
+                xl.init_mlstm(b, "cell", cfg)
+
+
+# ------------------------------------------------------------- Zamba2 ------
+
+def zamba_layout(cfg: ArchConfig) -> Tuple[int, int, int]:
+    """(n_units, mamba_per_unit, tail) — each unit = (period-1) mamba + 1
+    shared attention application; tail = trailing mamba blocks."""
+    period = cfg.shared_attn_period
+    n_units = cfg.num_layers // period
+    tail = cfg.num_layers % period
+    return n_units, period - 1, tail
+
+
+def zamba_stack(p, x, cfg: ArchConfig, cache=None, pos=None, kind="train",
+                decode_ring=False):
+    """Macro scan over units; shared transformer block weights are reused by
+    every application (Zamba's parameter-sharing trick)."""
+    n_units, m_per, tail = zamba_layout(cfg)
+    shared = p["shared"]
+
+    def mamba_body(carry, xs):
+        xx, _ = carry
+        if cache is not None:
+            p_l, st_l = xs
+        else:
+            p_l, st_l = xs, None
+        h = norm(p_l["ln"], xx, cfg.norm)
+        y, st2 = mamba_block(p_l["cell"], h, cfg, st_l)
+        return (xx + y, jnp.float32(0)), st2
+
+    mamba_body = _maybe_ckpt(mamba_body, cfg, kind)
+
+    def unit_body(carry, xs):
+        xx, aux = carry
+        if cache is not None:
+            p_u, st_u, attn_c = xs
+        else:
+            p_u, st_u, attn_c = xs, None, None
+        inner_xs = (p_u, st_u) if cache is not None else p_u
+        (xx, _), st2 = jax.lax.scan(mamba_body, (xx, jnp.float32(0)), inner_xs)
+        xx, attn_c2, a = transformer_block(
+            shared, xx, cfg, causal=True, cache=attn_c, pos=pos, kind=kind,
+            decode_ring=decode_ring)
+        return (xx, aux + a), (st2, attn_c2)
+
+    # stacked (n_units*m_per, ...) -> nested (n_units, m_per, ...) for the
+    # two-level scan
+    p_units = jax.tree.map(
+        lambda a: a.reshape((n_units, m_per) + a.shape[1:]), p["mamba_units"])
+    if cache is not None:
+        xs = (p_units, cache["mamba_units"], cache["attn"])
+    else:
+        xs = p_units
+    (x, aux), ys = jax.lax.scan(unit_body, (x, jnp.float32(0)), xs)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"mamba_units": ys[0], "attn": ys[1]}
+
+    if tail:
+        inner_xs = (p["mamba_tail"], cache["mamba_tail"]) \
+            if cache is not None else p["mamba_tail"]
+        (x, _), st_tail = jax.lax.scan(mamba_body, (x, jnp.float32(0)), inner_xs)
+        if cache is not None:
+            new_cache["mamba_tail"] = st_tail
+    return x, new_cache, aux
+
+
+def init_zamba(b, cfg: ArchConfig):
+    n_units, m_per, tail = zamba_layout(cfg)
+    with b.scope("mamba_units"):
+        # stacked (n_units * m_per, ...); reshaped to (n_units, m_per, ...)
+        init_norm(b, "ln", cfg.d_model, cfg.norm, stack=n_units * m_per)
+        init_mamba(b, "cell", cfg, stack=n_units * m_per)
+    if tail:
+        with b.scope("mamba_tail"):
+            init_norm(b, "ln", cfg.d_model, cfg.norm, stack=tail)
+            init_mamba(b, "cell", cfg, stack=tail)
+    with b.scope("shared"):
+        init_transformer_block(b, cfg)

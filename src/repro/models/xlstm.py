@@ -1,0 +1,257 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, inherently sequential scan).
+
+TPU adaptation notes (DESIGN §Hardware-adaptation): the original xLSTM ships
+fused CUDA kernels for both cells. The mLSTM parallel form maps naturally to
+MXU matmuls — we use a chunkwise decomposition (intra-chunk D-masked
+attention-like matmuls + inter-chunk (C, n, m) recurrence) mirroring our SSD
+schedule. The sLSTM recurrence is sequential by construction (the paper says
+as much); it lowers to ``lax.scan`` over time with per-head block-diagonal
+recurrent matmuls — no TPU-parallel form exists, so xlstm-125m keeps sLSTM at
+only the configured block positions.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import norm, init_norm
+from repro.models.ssm import _depthwise_conv
+from repro.parallel.sharding import shard
+
+NEG = -1e30
+
+
+def _logsigmoid(x):
+    return -jax.nn.softplus(-x)
+
+
+# ------------------------------------------------------------- mLSTM -------
+
+@jax.named_scope("mlstm_cell")
+def mlstm_chunked(q, k, v, i_raw, f_raw, chunk: int, carry=None):
+    """Chunkwise stabilized mLSTM cell.
+
+    q,k,v: (B,S,H,D); i_raw,f_raw: (B,S,H). carry: None or (C,n,m) with
+    C (B,H,D,D), n (B,H,D), m (B,H). Returns (h (B,S,H,D), carry').
+    """
+    B, S, H, D = q.shape
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+    scale = D ** -0.5
+    qc = q.reshape(B, nc, Q, H, D).transpose(0, 3, 1, 2, 4)    # (B,H,nc,Q,D)
+    kc = k.reshape(B, nc, Q, H, D).transpose(0, 3, 1, 2, 4) * scale
+    vc = v.reshape(B, nc, Q, H, D).transpose(0, 3, 1, 2, 4)
+    ic = i_raw.reshape(B, nc, Q, H).transpose(0, 3, 1, 2)      # (B,H,nc,Q)
+    lf = _logsigmoid(f_raw.astype(jnp.float32))
+    fc = lf.reshape(B, nc, Q, H).transpose(0, 3, 1, 2)
+    F = jnp.cumsum(fc, axis=-1)                                # (B,H,nc,Q)
+    ic = ic.astype(jnp.float32)
+
+    # intra-chunk log-decay matrix: logD[l,s] = F_l - F_s + i_s (s <= l)
+    logD = F[..., :, None] - F[..., None, :] + ic[..., None, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    logD = jnp.where(tri, logD, NEG)
+
+    if carry is None:
+        C0 = jnp.zeros((B, H, D, D), jnp.float32)
+        n0 = jnp.zeros((B, H, D), jnp.float32)
+        m0 = jnp.full((B, H), NEG, jnp.float32)
+    else:
+        C0, n0, m0 = carry
+
+    def step(cr, inp):
+        C, n, m = cr
+        qj, kj, vj, Fj, ij, logDj = inp
+        # qj (B,H,Q,D), Fj (B,H,Q), logDj (B,H,Q,Q)
+        m_row = jnp.maximum(jnp.max(logDj, -1), Fj + m[..., None])  # (B,H,Q)
+        m_row = jnp.maximum(m_row, NEG)
+        Dm = jnp.exp(logDj - m_row[..., None])
+        qk = jnp.einsum("bhld,bhsd->bhls", qj.astype(jnp.float32),
+                        kj.astype(jnp.float32))
+        Sm = qk * Dm
+        inter_w = jnp.exp(Fj + m[..., None] - m_row)            # (B,H,Q)
+        h_num = jnp.einsum("bhls,bhsd->bhld", Sm, vj.astype(jnp.float32)) \
+            + inter_w[..., None] * jnp.einsum(
+                "bhld,bhde->bhle", qj.astype(jnp.float32), C)
+        qn = jnp.sum(Sm, -1) + inter_w * jnp.einsum(
+            "bhld,bhd->bhl", qj.astype(jnp.float32), n)
+        denom = jnp.maximum(jnp.abs(qn), jnp.exp(-m_row))
+        h = h_num / denom[..., None]
+        # carry update to end of chunk
+        FQ = Fj[..., -1:]                                       # (B,H,1)
+        m_new = jnp.maximum(m + FQ[..., 0],
+                            jnp.max(ij + FQ - Fj, axis=-1))
+        m_new = jnp.maximum(m_new, NEG)
+        w_old = jnp.exp(m + FQ[..., 0] - m_new)                 # (B,H)
+        w_s = jnp.exp(ij + FQ - Fj - m_new[..., None])          # (B,H,Q)
+        C = w_old[..., None, None] * C + jnp.einsum(
+            "bhs,bhsd,bhse->bhde", w_s, kj.astype(jnp.float32),
+            vj.astype(jnp.float32))
+        n = w_old[..., None] * n + jnp.einsum(
+            "bhs,bhsd->bhd", w_s, kj.astype(jnp.float32))
+        return (C, n, m_new), h
+
+    xs = (qc.transpose(2, 0, 1, 3, 4), kc.transpose(2, 0, 1, 3, 4),
+          vc.transpose(2, 0, 1, 3, 4), F.transpose(2, 0, 1, 3),
+          ic.transpose(2, 0, 1, 3), logD.transpose(2, 0, 1, 3, 4))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    # hs: (nc, B, H, Q, D) -> (B, nc, Q, H, D) -> (B, S, H, D)
+    h = hs.transpose(1, 0, 3, 2, 4).reshape(B, S, H, D)
+    return h.astype(q.dtype), (C, n, m)
+
+
+def mlstm_block(p, x, cfg: ArchConfig, state: Optional[dict] = None):
+    """x: (B,S,d). Returns (y, state')."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    d_inner = 2 * d
+    D = d_inner // H
+
+    xu = jnp.einsum("bsd,de->bse", x, p["w_up"].astype(x.dtype))
+    z = jnp.einsum("bsd,de->bse", x, p["w_z"].astype(x.dtype))
+    xu = shard(xu, "batch", None, "ssm_inner")
+    st = state or {}
+    c, st_conv = _depthwise_conv(xu, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), st.get("conv"))
+    c = jax.nn.silu(c)
+    q = jnp.einsum("bse,ef->bsf", c, p["w_q"].astype(x.dtype)).reshape(B, S, H, D)
+    k = jnp.einsum("bse,ef->bsf", c, p["w_k"].astype(x.dtype)).reshape(B, S, H, D)
+    v = jnp.einsum("bse,ef->bsf", xu, p["w_v"].astype(x.dtype)).reshape(B, S, H, D)
+    i_raw = jnp.einsum("bse,eh->bsh", xu, p["w_i"].astype(x.dtype)) \
+        + p["b_i"].astype(x.dtype)
+    f_raw = jnp.einsum("bse,eh->bsh", xu, p["w_f"].astype(x.dtype)) \
+        + p["b_f"].astype(x.dtype)
+
+    carry = None
+    if "C" in st:
+        carry = (st["C"], st["n"], st["m"])
+    h, (C, n, m) = mlstm_chunked(q, k, v, i_raw, f_raw, chunk=128, carry=carry)
+
+    # per-head group norm
+    hf = h.astype(jnp.float32)
+    mu = jnp.mean(hf, axis=-1, keepdims=True)
+    var = jnp.var(hf, axis=-1, keepdims=True)
+    hf = (hf - mu) * jax.lax.rsqrt(var + 1e-5)
+    hf = hf.reshape(B, S, d_inner) * p["gn_scale"].astype(jnp.float32)
+    h = hf.astype(x.dtype) * jax.nn.silu(z)
+    y = jnp.einsum("bse,ed->bsd", h, p["w_down"].astype(x.dtype))
+    y = shard(y, "batch", "act_seq", "embed")
+    return y, {"conv": st_conv, "C": C, "n": n, "m": m}
+
+
+def init_mlstm(b, name: str, cfg: ArchConfig, stack: int = 0):
+    d = cfg.d_model
+    d_inner = 2 * d
+    H = cfg.num_heads
+    with b.scope(name):
+        b.add("w_up", (d, d_inner), ("embed", "ssm_inner"), stack=stack)
+        b.add("w_z", (d, d_inner), ("embed", "ssm_inner"), stack=stack)
+        b.add("conv_w", (4, d_inner), ("conv_width", "ssm_inner"),
+              init="normal", scale=0.2, stack=stack)
+        b.add("conv_b", (d_inner,), ("ssm_inner",), init="zeros", stack=stack)
+        b.add("w_q", (d_inner, d_inner), ("ssm_inner", None), stack=stack)
+        b.add("w_k", (d_inner, d_inner), ("ssm_inner", None), stack=stack)
+        b.add("w_v", (d_inner, d_inner), ("ssm_inner", None), stack=stack)
+        b.add("w_i", (d_inner, H), ("ssm_inner", "ssm_heads"), stack=stack)
+        b.add("b_i", (H,), ("ssm_heads",), init="zeros", stack=stack)
+        b.add("w_f", (d_inner, H), ("ssm_inner", "ssm_heads"), stack=stack)
+        b.add("b_f", (H,), ("ssm_heads",), init="const", scale=3.0, stack=stack)
+        b.add("gn_scale", (d_inner,), ("ssm_inner",), init="ones", stack=stack)
+        b.add("w_down", (d_inner, d), ("ssm_inner", "embed"), stack=stack)
+
+
+def make_mlstm_state(cfg: ArchConfig, batch: int, layers: int,
+                     dtype=jnp.bfloat16):
+    d_inner = 2 * cfg.d_model
+    H = cfg.num_heads
+    D = d_inner // H
+    return {
+        "conv": jnp.zeros((layers, batch, 3, d_inner), dtype),
+        "C": jnp.zeros((layers, batch, H, D, D), jnp.float32),
+        "n": jnp.zeros((layers, batch, H, D), jnp.float32),
+        "m": jnp.full((layers, batch, H), NEG, jnp.float32),
+    }
+
+
+# ------------------------------------------------------------- sLSTM -------
+
+def slstm_scan(x4, state, H: int, D: int, R):
+    """x4: (B,S,H,4D) pre-activations for (i,f,z,o). R: (H,D,4D) recurrent.
+    state: (h,c,n,m) each (B,H,D) except m (B,H,D).
+    Returns (h_seq (B,S,H,D), state')."""
+    def step(cr, xt):
+        h, c, n, m = cr                                        # (B,H,D)
+        rec = jnp.einsum("bhd,hde->bhe", h, R.astype(jnp.float32))
+        pre = xt.astype(jnp.float32) + rec                     # (B,H,4D)
+        ig, fg, zg, og = jnp.split(pre, 4, axis=-1)
+        lf = _logsigmoid(fg)
+        m_new = jnp.maximum(lf + m, ig)
+        i_p = jnp.exp(ig - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c = f_p * c + i_p * jnp.tanh(zg)
+        n = f_p * n + i_p
+        h = jax.nn.sigmoid(og) * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    xs = x4.transpose(1, 0, 2, 3)                              # (S,B,H,4D)
+    state2, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3), state2                    # (B,S,H,D)
+
+
+def slstm_block(p, x, cfg: ArchConfig, state: Optional[dict] = None):
+    """sLSTM block with post-up-projection (4/3) gated FF."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    D = d // H
+    x4 = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(x.dtype)) \
+        + p["b_in"].astype(x.dtype)
+    x4 = x4.reshape(B, S, H, 4 * D)
+    if state is None:
+        z = jnp.zeros((B, H, D), jnp.float32)
+        st = (z, z, z, jnp.full((B, H, D), NEG, jnp.float32))
+    else:
+        st = (state["h"], state["c"], state["n"], state["m"])
+    h, (hh, cc, nn, mm) = slstm_scan(x4, st, H, D, p["R"])
+    # group norm per head
+    hf = h.astype(jnp.float32)
+    mu = jnp.mean(hf, -1, keepdims=True)
+    var = jnp.var(hf, -1, keepdims=True)
+    hf = (hf - mu) * jax.lax.rsqrt(var + 1e-5)
+    hf = hf.reshape(B, S, d) * p["gn_scale"].astype(jnp.float32)
+    y = hf.astype(x.dtype)
+    # gated FF (4/3 factor)
+    f_up = jnp.einsum("bsd,df->bsf", y, p["ff_up"].astype(x.dtype))
+    f_gate = jnp.einsum("bsd,df->bsf", y, p["ff_gate"].astype(x.dtype))
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.gelu(f_gate) * f_up,
+                   p["ff_down"].astype(x.dtype))
+    y = shard(y, "batch", "act_seq", "embed")
+    return y, {"h": hh, "c": cc, "n": nn, "m": mm}
+
+
+def init_slstm(b, name: str, cfg: ArchConfig, stack: int = 0):
+    d = cfg.d_model
+    H = cfg.num_heads
+    D = d // H
+    f = int(d * 4 / 3) // 8 * 8
+    with b.scope(name):
+        b.add("w_in", (d, 4 * d), ("embed", "ssm_inner"), stack=stack)
+        b.add("b_in", (4 * d,), ("ssm_inner",), init="zeros", stack=stack)
+        b.add("R", (H, D, 4 * D), ("ssm_heads", None, None), stack=stack)
+        b.add("gn_scale", (d,), ("embed",), init="ones", stack=stack)
+        b.add("ff_up", (d, f), ("embed", "mlp"), stack=stack)
+        b.add("ff_gate", (d, f), ("embed", "mlp"), stack=stack)
+        b.add("ff_down", (f, d), ("mlp", "embed"), stack=stack)
+
+
+def make_slstm_state(cfg: ArchConfig, batch: int, layers: int):
+    H = cfg.num_heads
+    D = cfg.d_model // H
+    z = jnp.zeros((layers, batch, H, D), jnp.float32)
+    return {"h": z, "c": z, "n": z,
+            "m": jnp.full((layers, batch, H, D), NEG, jnp.float32)}

@@ -1,0 +1,5 @@
+from repro.parallel.sharding import (ShardingPolicy, current_policy,
+                                     use_policy, shard, logical_spec)
+
+__all__ = ["ShardingPolicy", "current_policy", "use_policy", "shard",
+           "logical_spec"]

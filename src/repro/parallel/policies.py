@@ -1,0 +1,107 @@
+"""Per-architecture sharding-policy resolution.
+
+The production mesh is fixed at (data=16, model=16) per pod (+"pod" axis for
+multi-pod). Which tensor dims can use the 16-wide "model" axis depends on
+divisibility, so rules are resolved per arch:
+
+  * attention: shard kv_heads if K % tp == 0, else the q-group dim if
+    (H/K) % tp == 0, else run attention data-parallel (weights still FSDP).
+    This mirrors Megatron practice where TP width is bounded by KV heads.
+  * MoE: expert-parallel when E % tp == 0 (experts axis), else tensor-
+    parallel inside experts (mlp axis).
+  * vocab / mlp / ssm dims: sharded only when divisible.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.parallel.sharding import MeshAxes, ShardingPolicy
+
+
+def _tp(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def policy_for(arch: ArchConfig, mesh: Optional[Mesh], *,
+               fsdp: Optional[bool] = None,
+               overrides: Optional[Dict[str, MeshAxes]] = None,
+               seq_shard: bool = False,
+               global_batch: Optional[int] = None) -> ShardingPolicy:
+    tp = _tp(mesh) if mesh is not None else 1
+    r: Dict[str, MeshAxes] = {}
+
+    # batch sharding degrades gracefully for small batches (e.g. the
+    # long_500k single-sequence decode): drop axes until divisible
+    if global_batch is not None and mesh is not None:
+        axes = ["pod", "data"] if "pod" in mesh.axis_names else ["data"]
+        while axes:
+            dp = 1
+            for a in axes:
+                dp *= mesh.shape[a]
+            if global_batch % dp == 0:
+                break
+            axes.pop(0)                     # sacrifice the pod (DCI) axis first
+        ba = tuple(axes) if axes else None
+        r["batch"] = ba
+        r["cache_batch"] = ba
+
+    K, H = arch.num_kv_heads, arch.num_heads
+    G = max(1, H // K)
+    if K % tp == 0:
+        r["kv_heads"], r["qgroup"] = "model", None
+    elif G % tp == 0:
+        r["kv_heads"], r["qgroup"] = None, "model"
+    else:
+        r["kv_heads"], r["qgroup"] = None, None
+
+    if arch.moe is not None:
+        if arch.moe.num_experts % tp == 0:
+            r["experts"], r["mlp"] = "model", None
+        else:
+            r["experts"] = None
+            r["mlp"] = "model" if arch.d_ff % tp == 0 else None
+    else:
+        r["mlp"] = "model" if (arch.d_ff and arch.d_ff % tp == 0) else None
+
+    r["vocab"] = "model" if arch.vocab_size % tp == 0 else None
+
+    s_cfg = arch.ssm or SSMConfig()
+    d_inner_h = s_cfg.expand * arch.d_model               # hybrid
+    d_inner_x = 2 * arch.d_model                           # xlstm mlstm
+    di = d_inner_h if arch.family == "hybrid" else d_inner_x
+    r["ssm_inner"] = "model" if di % tp == 0 else None
+    nheads = (s_cfg.num_heads or di // s_cfg.head_dim) \
+        if arch.family == "hybrid" else arch.num_heads
+    r["ssm_heads"] = "model" if nheads % tp == 0 else None
+
+    # sequence sharding of the residual stream (SP) — opt-in (perf knob)
+    if seq_shard:
+        r["act_seq"] = "model"
+
+    if overrides:
+        r.update(overrides)
+
+    if fsdp is None:
+        fsdp = False
+    return ShardingPolicy(mesh, rules=r, fsdp=fsdp)
+
+
+def default_fsdp(arch: ArchConfig, kind: str, tp: int = 16,
+                 hbm_budget_bytes: float = 8e9) -> bool:
+    """FSDP (ZeRO) when TP-only sharding of the persistent state would not
+    fit the per-device HBM budget (v5e: 16 GB; ~8 GB left for state).
+
+    train: params+grads+moments must fit; serve: bf16 params (+the cache,
+    which is batch-sharded anyway) — weight-gathered serving is the standard
+    fallback when a model exceeds its TP slice.
+    """
+    from repro.models.model import count_params
+    p = count_params(arch)
+    if kind == "train":
+        moment_bytes = 2 if arch.opt_dtype == "bfloat16" else 4
+        state_bytes = p * (2 + 2 + 2 * moment_bytes)   # params+grads+m+v
+        return state_bytes / tp > hbm_budget_bytes
+    return 2 * p / tp > 6e9

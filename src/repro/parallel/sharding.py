@@ -1,0 +1,169 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical names to mesh axes.
+
+Model code annotates activations with ``shard(x, "batch", "seq", "embed")``;
+parameters carry logical-axis tuples recorded by ``ParamBuilder`` at init.
+A ``ShardingPolicy`` resolves logical names to (possibly multiple) mesh axes.
+Everything degrades to a no-op when no policy is active, so single-device
+tests never touch mesh machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Baseline rule set: DP over (pod, data), Megatron TP over model, EP over model.
+DEFAULT_RULES: Dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "act_seq": None,            # sequence axis of activations (SP shards this)
+    "embed": None,              # residual-stream feature axis
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",             # d_ff
+    "vocab": "model",
+    "experts": "model",
+    "expert_capacity": None,
+    "ssm_heads": "model",
+    "ssm_state": None,
+    "ssm_inner": "model",
+    "conv_width": None,
+    "layers": None,
+    "fsdp": "data",             # extra axis FSDP shards params over
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,
+    "cross_seq": None,
+    "attn_q_seq": None,   # context-parallel attention: q rows over "model"
+    "frames": None,
+    "logit_seq": None,
+}
+
+
+class ShardingPolicy:
+    """Resolves logical axis names to mesh axes; builds NamedShardings."""
+
+    def __init__(self, mesh: Optional[Mesh], rules: Optional[Dict[str, MeshAxes]] = None,
+                 fsdp: bool = False):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+        self.fsdp = fsdp
+        # Drop references to mesh axes the mesh does not actually have
+        # (e.g. "pod" on the single-pod mesh).
+        if mesh is not None:
+            have = set(mesh.axis_names)
+            clean = {}
+            for k, v in self.rules.items():
+                if v is None:
+                    clean[k] = None
+                elif isinstance(v, str):
+                    clean[k] = v if v in have else None
+                else:
+                    kept = tuple(a for a in v if a in have)
+                    clean[k] = kept if kept else None
+            self.rules = clean
+
+    def spec(self, *logical: Optional[str]) -> P:
+        parts, used = [], set()
+        for name in logical:
+            if name is None:
+                parts.append(None)
+                continue
+            axes = self.rules.get(name)
+            if axes is None:
+                parts.append(None)
+            elif isinstance(axes, str):
+                parts.append(None if axes in used else axes)
+                used.add(axes)
+            else:
+                kept = tuple(a for a in axes if a not in used)
+                used.update(kept)
+                parts.append(kept if kept else None)
+        return P(*parts)
+
+    def named(self, *logical: Optional[str]) -> NamedSharding:
+        assert self.mesh is not None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def param_spec(self, axes: Sequence[Optional[str]]) -> P:
+        """Param sharding; with fsdp=True the largest unsharded dim also
+        shards over the fsdp axis (applied later, needs shapes)."""
+        return self.spec(*axes)
+
+    def constraint(self, x, *logical: Optional[str]):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.named(*logical))
+
+
+_state = threading.local()
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    return getattr(_state, "policy", None)
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[ShardingPolicy]):
+    prev = getattr(_state, "policy", None)
+    _state.policy = policy
+    try:
+        yield policy
+    finally:
+        _state.policy = prev
+
+
+def shard(x, *logical: Optional[str]):
+    """Annotate activation ``x`` with logical axes (no-op without a policy)."""
+    pol = current_policy()
+    if pol is None or pol.mesh is None:
+        return x
+    return pol.constraint(x, *logical)
+
+
+def logical_spec(*logical: Optional[str]) -> Optional[P]:
+    pol = current_policy()
+    if pol is None:
+        return None
+    return pol.spec(*logical)
+
+
+def fsdp_param_spec(policy: ShardingPolicy, axes: Tuple[Optional[str], ...],
+                    shape: Tuple[int, ...]) -> P:
+    """Resolve a parameter PartitionSpec, adding FSDP sharding of the largest
+    still-unsharded, divisible dim over the fsdp axis."""
+    spec = list(policy.spec(*axes))
+    while len(spec) < len(shape):
+        spec.append(None)
+    if not policy.fsdp or policy.mesh is None:
+        return P(*spec)
+    fsdp_axes = policy.rules.get("fsdp")
+    if fsdp_axes is None:
+        return P(*spec)
+    if isinstance(fsdp_axes, str):
+        fsdp_axes = (fsdp_axes,)
+    used = {a for s in spec if s for a in ((s,) if isinstance(s, str) else s)}
+    fsdp_axes = tuple(a for a in fsdp_axes if a not in used)
+    if not fsdp_axes:
+        return P(*spec)
+    fsdp_size = 1
+    for a in fsdp_axes:
+        fsdp_size *= policy.mesh.shape[a]
+    # pick the largest dim that is unsharded and divisible by the fsdp size;
+    # never the scan-stacked "layers" dim (scan slices along it every step)
+    cand = [(shape[i], i) for i in range(len(shape))
+            if spec[i] is None and shape[i] % fsdp_size == 0
+            and shape[i] >= fsdp_size
+            and not (i < len(axes) and axes[i] == "layers")]
+    if not cand:
+        return P(*spec)
+    _, idx = max(cand)
+    spec[idx] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+    return P(*spec)

@@ -1,0 +1,5 @@
+from repro.roofline.analysis import (HW, CellReport, analyze_compiled,
+                                     model_flops, parse_collectives)
+
+__all__ = ["HW", "CellReport", "analyze_compiled", "model_flops",
+           "parse_collectives"]

@@ -1,0 +1,406 @@
+"""Three-term roofline analysis from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_total   / (chips x peak_FLOP/s)
+    memory term     = HLO_bytes_total   / (chips x HBM_bw)
+    collective term = collective_bytes  / (chips x link_bw)
+
+``cost_analysis()`` on an SPMD-partitioned executable reports *per-device*
+flops/bytes; we multiply by chip count so the spec formulas above apply
+verbatim. Collective bytes are summed over the operands of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+in the partitioned HLO (per-device shard sizes, x chips). We additionally
+report a ring-model estimate (per-op factor x bytes / link_bw) which is the
+better wall-clock predictor; both appear in EXPERIMENTS.md.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+HW = {
+    "peak_flops": 197e12,       # bf16 per chip
+    "hbm_bw": 819e9,            # bytes/s per chip
+    "link_bw": 50e9,            # bytes/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ring-model cost factors: per-device link-bytes per operand byte
+_RING_FACTOR = {
+    "all-reduce": 2.0,          # 2(N-1)/N ~ 2
+    "all-gather": None,         # (N-1) x shard bytes — needs N
+    "reduce-scatter": 1.0,      # (N-1)/N ~ 1
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+    return n * b
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+_OP_LINE_RE = re.compile(
+    r"=\s+(?P<result>.+?)\s+(?P<kind>all-reduce|all-gather|reduce-scatter|"
+    r"all-to-all|collective-permute)\(")
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> Dict[str, Dict]:
+    """Per-collective-kind OPERAND bytes + ring-model link bytes (per device).
+
+    The optimized-HLO printer types only the *result*, so operand bytes are
+    derived per kind: AR/A2A/permute results equal their operands;
+    all-gather operands are result/N shards; reduce-scatter operands are
+    result x N. (Sync ops only — the CPU dry-run backend does not emit
+    -start/-done pairs.)
+    """
+    out = {k: {"count": 0, "bytes": 0.0, "ring_bytes": 0.0}
+           for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        res_bytes = sum(_type_bytes(d, s)
+                        for d, s in _SHAPE_RE.findall(m.group("result")))
+        n = max(2, _group_size(line, n_devices))
+        if kind == "all-gather":
+            op_bytes = res_bytes / n
+            ring = (n - 1) * op_bytes                  # ~= res_bytes
+        elif kind == "reduce-scatter":
+            op_bytes = res_bytes * n
+            ring = (n - 1) * res_bytes
+        elif kind == "all-reduce":
+            op_bytes = res_bytes
+            ring = 2.0 * (n - 1) / n * op_bytes
+        else:                                          # all-to-all / permute
+            op_bytes = res_bytes
+            ring = (n - 1) / n * op_bytes
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += op_bytes
+        out[kind]["ring_bytes"] += ring
+    return out
+
+
+@dataclasses.dataclass
+class CellReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    ring_bytes_per_device: float
+    collectives: Dict[str, Dict]
+    memory: Dict[str, float]
+    model_flops_total: float
+    compile_seconds: float = 0.0
+    # scope-bucketed costs (per device) + the Pallas-kernel traffic model
+    bytes_by_scope: Dict[str, float] = dataclasses.field(default_factory=dict)
+    flops_by_scope: Dict[str, float] = dataclasses.field(default_factory=dict)
+    kernel_min_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    causal_factor: float = 1.0
+    f32_act_ring: float = 0.0    # CPU float-norm inflation (see hlo_cost)
+
+    # --- roofline terms (seconds) ---
+    @property
+    def compute_term(self) -> float:
+        return self.flops_per_device / HW["peak_flops"]
+
+    @property
+    def memory_term(self) -> float:
+        return self.bytes_per_device / HW["hbm_bw"]
+
+    @property
+    def collective_term(self) -> float:
+        return self.collective_bytes_per_device / HW["link_bw"]
+
+    @property
+    def collective_term_ring(self) -> float:
+        """TPU-adjusted ring model: f32 collectives on dot-adjacent
+        activations are a CPU float-normalization artifact — the TPU
+        program moves them in bf16 (half the bytes)."""
+        adj = self.ring_bytes_per_device - 0.5 * self.f32_act_ring
+        return adj / HW["link_bw"]
+
+    @property
+    def collective_term_ring_raw(self) -> float:
+        return self.ring_bytes_per_device / HW["link_bw"]
+
+    # --- Pallas-kernelized terms: attention/ssd/mlstm interiors live in
+    # VMEM on the TPU target; their HBM traffic drops to the analytic tile
+    # I/O minimum and flash skips fully-masked blocks ---
+    @property
+    def kernel_scope_bytes(self) -> float:
+        return sum(v for k, v in self.bytes_by_scope.items() if k != "other")
+
+    @property
+    def bytes_kernelized(self) -> float:
+        return (self.bytes_per_device - self.kernel_scope_bytes
+                + sum(self.kernel_min_bytes.values()))
+
+    @property
+    def flops_kernelized(self) -> float:
+        attn = sum(v for k, v in self.flops_by_scope.items()
+                   if "attention" in k)
+        return self.flops_per_device - attn * (1.0 - self.causal_factor)
+
+    @property
+    def memory_term_kernelized(self) -> float:
+        return self.bytes_kernelized / HW["hbm_bw"]
+
+    @property
+    def compute_term_kernelized(self) -> float:
+        return self.flops_kernelized / HW["peak_flops"]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_term_kernelized,
+                 "memory": self.memory_term_kernelized,
+                 "collective": self.collective_term_ring}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_seconds(self) -> float:
+        """XLA-fallback bound (what compiles in this container)."""
+        return max(self.compute_term, self.memory_term,
+                   self.collective_term_ring)
+
+    @property
+    def bound_seconds_kernelized(self) -> float:
+        """TPU-target bound (Pallas kernels for the tagged interiors)."""
+        return max(self.compute_term_kernelized,
+                   self.memory_term_kernelized,
+                   self.collective_term_ring)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        total_hlo = self.flops_kernelized * self.chips
+        return self.model_flops_total / total_hlo if total_hlo else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute-time / kernelized bound — the score we hillclimb."""
+        useful = self.model_flops_total / (self.chips * HW["peak_flops"])
+        return useful / self.bound_seconds_kernelized \
+            if self.bound_seconds_kernelized else 0.0
+
+    @property
+    def roofline_fraction_xla(self) -> float:
+        useful = self.model_flops_total / (self.chips * HW["peak_flops"])
+        return useful / self.bound_seconds if self.bound_seconds else 0.0
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        for k in ("compute_term", "memory_term", "collective_term",
+                  "collective_term_ring", "dominant", "bound_seconds",
+                  "useful_flops_fraction", "roofline_fraction",
+                  "compute_term_kernelized", "memory_term_kernelized",
+                  "bound_seconds_kernelized", "roofline_fraction_xla",
+                  "bytes_kernelized", "flops_kernelized"):
+            d[k] = getattr(self, k)
+        return d
+
+
+def analyze_compiled(compiled, *, arch: ArchConfig, shape: ShapeConfig,
+                     mesh_name: str, chips: int,
+                     compile_seconds: float = 0.0,
+                     policy=None, cache_bytes: int = 2) -> CellReport:
+    from repro.roofline.hlo_cost import analyze_hlo
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    try:
+        ma = compiled.memory_analysis()
+        memory = {
+            "argument_bytes": float(getattr(ma, "argument_size_in_bytes", 0)),
+            "output_bytes": float(getattr(ma, "output_size_in_bytes", 0)),
+            "temp_bytes": float(getattr(ma, "temp_size_in_bytes", 0)),
+            "alias_bytes": float(getattr(ma, "alias_size_in_bytes", 0)),
+            "peak_bytes_est": float(getattr(ma, "argument_size_in_bytes", 0))
+            + float(getattr(ma, "output_size_in_bytes", 0))
+            + float(getattr(ma, "temp_size_in_bytes", 0))
+            - float(getattr(ma, "alias_size_in_bytes", 0)),
+        }
+    except Exception as e:                     # CPU backend may not support
+        memory = {"error": 0.0}
+    text = compiled.as_text()
+    hc = analyze_hlo(text, chips)
+    memory["xla_flops"] = float(cost.get("flops", 0.0))
+    memory["xla_bytes"] = float(cost.get("bytes accessed", 0.0))
+    memory["unknown_trip_loops"] = float(hc.n_unknown_trip)
+    kv_seq_shards = 1
+    if policy is not None and policy.mesh is not None:
+        ax = policy.rules.get("cache_seq")
+        if ax:
+            ax = (ax,) if isinstance(ax, str) else ax
+            for a in ax:
+                kv_seq_shards *= policy.mesh.shape[a]
+    kmin, causal = kernel_traffic(arch, shape, chips, hc.bytes_by_scope,
+                                  kv_seq_shards=kv_seq_shards,
+                                  cache_bytes=cache_bytes)
+    return CellReport(
+        arch=arch.name, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_device=hc.flops, bytes_per_device=hc.bytes_accessed,
+        collective_bytes_per_device=hc.collective_bytes,
+        ring_bytes_per_device=hc.ring_bytes,
+        collectives=hc.collectives, memory=memory,
+        model_flops_total=model_flops(arch, shape),
+        compile_seconds=compile_seconds,
+        bytes_by_scope=hc.bytes_by_scope, flops_by_scope=hc.flops_by_scope,
+        kernel_min_bytes=kmin, causal_factor=causal,
+        f32_act_ring=hc.f32_act_ring)
+
+
+def kernel_traffic(arch: ArchConfig, shape: ShapeConfig, chips: int,
+                   bytes_by_scope: Dict[str, float],
+                   block_q: int = 512,
+                   kv_seq_shards: int = 1,
+                   cache_bytes: int = 2) -> Tuple[Dict[str, float], float]:
+    """Analytic minimum HBM traffic (bytes/device) for the Pallas-kernelized
+    interiors, and the flash causal block-skip factor.
+
+    flash fwd: q + out read/written once; k,v streamed once per q-block row
+    -> traffic = (q + o) + nq*(k + v); train adds ~2x for the backward
+    (dq/dk/dv passes re-stream the same tiles). ssd/mlstm kernels: chunk
+    intermediates stay in VMEM; surface = block in/out (~3x inner width).
+    Replication note: if attention is unsharded on "model", every model rank
+    streams the same tiles, so per-device traffic does not shrink — exactly
+    what the fallback shows too.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    dp = max(1, chips // 16)                 # batch shard width
+    B_loc = max(1, B // dp)
+    H, K, hd = arch.num_heads, arch.num_kv_heads, arch.hd
+    by = 2                                    # bf16
+    mult = 3.0 if shape.kind == "train" else 1.0
+
+    n_attn = (arch.num_layers if arch.family in ("dense", "moe", "vlm")
+              else arch.num_layers + arch.encoder_layers if arch.family == "audio"
+              else (arch.num_layers // arch.shared_attn_period
+                    if arch.shared_attn_period else 0))
+    out: Dict[str, float] = {}
+    causal = 1.0
+    if "flash_attention" in bytes_by_scope or "dense_attention" in bytes_by_scope:
+        if shape.kind == "decode":
+            ctx = min(S, arch.sliding_window) if arch.sliding_window else S
+            ctx = ctx // max(1, kv_seq_shards)   # sequence-sharded cache
+            per_layer = B_loc * ctx * K * hd * cache_bytes * 2   # k and v
+        else:
+            nq = max(1, S // block_q)
+            q = B_loc * S * H * hd * by
+            o = q
+            kv = B_loc * S * K * hd * by * 2
+            # causal: q-block i streams only i+1 kv blocks -> ~nq/2 effective
+            eff_nq = (nq + 1) / 2 if not arch.sliding_window else \
+                min(nq, arch.sliding_window // block_q + 1)
+            per_layer = (q + o) + eff_nq * kv
+            causal = 0.5 + 0.5 / nq
+            if arch.sliding_window and arch.sliding_window < S:
+                causal = min(1.0, arch.sliding_window / S + 1.0 / nq)
+        scope = ("flash_attention" if "flash_attention" in bytes_by_scope
+                 else "dense_attention")
+        out[scope] = n_attn * per_layer * mult
+    if "ssd_chunk" in bytes_by_scope:
+        s_cfg = arch.ssm
+        di = (s_cfg.expand if s_cfg else 2) * arch.d_model
+        n_mamba = arch.num_layers - (arch.num_layers // arch.shared_attn_period
+                                     if arch.shared_attn_period else 0)
+        out["ssd_chunk"] = n_mamba * 3 * B_loc * S * di * by * mult
+    if "mlstm_cell" in bytes_by_scope:
+        di = 2 * arch.d_model
+        n_m = arch.num_layers - len(arch.slstm_at)
+        out["mlstm_cell"] = n_m * 4 * B_loc * S * di * by * mult
+    if "moe_dispatch" in bytes_by_scope and arch.moe is not None:
+        # fused dispatch kernel: one write + two reads of the (per-shard)
+        # combine tensor; index arithmetic stays in VMEM/registers.
+        # decode processes ONE token per step, not seq_len.
+        import math as _m
+        E, kk = arch.moe.num_experts, arch.moe.top_k
+        s_tok = 1 if shape.kind == "decode" else S
+        Cap = max(8, ((int(_m.ceil(s_tok * kk * arch.moe.capacity_factor
+                                   / E)) + 7) // 8) * 8)
+        e_shards = min(16, E) if E % 16 == 0 else 1
+        out["moe_dispatch"] = (arch.num_layers * 3 * B_loc * s_tok
+                               * (E // e_shards) * Cap * by * mult)
+    if "kv_cache_update" in bytes_by_scope:
+        # in-place DUS on the donated cache: write (and RAW-read) only the
+        # updated token slots; the full-buffer convert churn around it is a
+        # CPU float-normalization artifact (TPU reads bf16/int8 natively)
+        wrote = S if shape.kind != "decode" else 1
+        wrote = min(wrote, arch.sliding_window) if arch.sliding_window else wrote
+        out["kv_cache_update"] = (n_attn * 2 * B_loc * wrote * K * hd
+                                  * cache_bytes * 2)         # k and v
+    return out, causal
+
+
+def model_flops(arch: ArchConfig, shape: ShapeConfig) -> float:
+    """Useful model FLOPs for the whole step: 6·N·D (train) / 2·N·D
+    (prefill/decode), N = active non-embedding params, plus explicit
+    attention (context) FLOPs."""
+    from repro.models.model import count_params
+    n = count_params(arch)
+    n -= arch.moe_inactive_ff_params()
+    if not arch.tie_embeddings:
+        n -= arch.vocab_size * arch.d_model      # input table (lookup, no FLOPs)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens, mult = B * S, 6
+    elif shape.kind == "prefill":
+        tokens, mult = B * S, 2
+    else:
+        tokens, mult = B, 2
+    param_flops = mult * n * tokens
+
+    # attention context FLOPs: 2 matmuls (QK^T, PV) of 2*S_ctx*H*hd per token
+    H, hd = arch.num_heads, arch.hd
+    n_attn_layers = (arch.num_layers if arch.family in
+                     ("dense", "moe", "vlm", "audio")
+                     else (arch.num_layers // arch.shared_attn_period
+                           if arch.shared_attn_period else 0))
+    if shape.kind == "decode":
+        ctx = min(S, arch.sliding_window) if arch.sliding_window else S
+        attn = 4 * B * ctx * H * hd * n_attn_layers
+    else:
+        ctx = S
+        causal = 0.5
+        if arch.sliding_window and arch.sliding_window < S:
+            causal = arch.sliding_window / S      # banded
+        attn = 4 * B * S * ctx * causal * H * hd * n_attn_layers
+        attn *= 3 if shape.kind == "train" else 1
+    return float(param_flops + attn)

@@ -1,0 +1,441 @@
+"""Trip-count-aware cost analysis of optimized (post-SPMD) HLO text.
+
+XLA's built-in ``cost_analysis()`` counts ``while`` bodies ONCE, which
+undercounts scanned programs (layer scans, grad-accumulation scans, flash
+attention block scans) by orders of magnitude. This analyzer walks the call
+graph from ENTRY with loop-trip multipliers and accumulates:
+
+  * flops            — from ``dot`` result/contraction shapes,
+  * bytes accessed   — a fused-memory-traffic model: per instruction,
+                       result + operand bytes, with slicing ops counted at
+                       slice (not operand) size; fusions count only their
+                       surface operands/results (interior is fused),
+  * collective bytes — per kind, with ring-model link bytes.
+
+Trip counts come from ``backend_config={"known_trip_count":{"n":N}}`` when
+present, else the largest integer constant in the loop condition
+computation (the jax scan pattern), else 1 with a warning.
+
+All numbers are per-device (the input is the SPMD-partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLED_RE = re.compile(
+    r"(?:condition|body|calls|to_apply|branch_computations)=\{?%?([\w.\-]+)"
+    r"(?:,\s*%?([\w.\-]+))*")
+_TRIP_RE = re.compile(r'known_trip_count[\\\"={:]+n[\\\"]*[:=][\\\"]*(\d+)')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(typestr: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _shape_dims(typestr: str) -> List[List[int]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(typestr):
+        if dt in _DTYPE_BYTES:
+            out.append([int(d) for d in dims.split(",") if d])
+    return out
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    typestr: str
+    op: str
+    rest: str
+    operands: List[str]
+    result_bytes: int
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    table: Dict[str, Instr]
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, typestr, op, rest = m.groups()
+        # operands: %refs inside the call parens (up to the closing paren
+        # at depth 0 — approximate by cutting at '), ' attr boundary)
+        call = rest.split("), ")[0]
+        operands = _OPERAND_RE.findall(call)
+        ins = Instr(name, typestr, op, rest, operands, _shape_bytes(typestr),
+                    is_root=line.lstrip().startswith("ROOT"))
+        cur.instrs.append(ins)
+        cur.table[name] = ins
+    return comps
+
+
+def _trip_count(instr: Instr, comps: Dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(instr.rest)
+    if m:
+        return int(m.group(1))
+    mc = re.search(r"condition=%?([\w.\-]+)", instr.rest)
+    if mc and mc.group(1) in comps:
+        consts = []
+        for i in comps[mc.group(1)].instrs:
+            if i.op == "constant":
+                m = re.match(r"(\d+)\)", i.rest)
+                if m:
+                    consts.append(int(m.group(1)))
+            consts.extend(int(c) for c in _CONST_RE.findall(i.rest))
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _dot_flops(instr: Instr, comp: Computation) -> float:
+    dims = _shape_dims(instr.typestr)
+    if not dims:
+        return 0.0
+    out_n = 1
+    for d in dims[0]:
+        out_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    contracted = 1
+    if m and instr.operands:
+        lhs = comp.table.get(instr.operands[0])
+        if lhs is not None:
+            ldims = _shape_dims(lhs.typestr)
+            if ldims:
+                for idx in m.group(1).split(","):
+                    if idx and int(idx) < len(ldims[0]):
+                        contracted *= ldims[0][int(idx)]
+    return 2.0 * out_n * contracted
+
+
+_FREE_OPS = {"tuple", "get-tuple-element", "parameter", "constant", "bitcast",
+             "after-all", "partition-id", "replica-id", "custom-call"}
+_SLICE_OPS = {"dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+              "slice"}
+_PARAM_IDX_RE = re.compile(r"^(\d+)\)")
+
+
+def _fusion_bytes(ins: Instr, comp: Computation,
+                  comps: Dict[str, Computation]) -> float:
+    """HBM traffic of a fusion node: slice-aware.
+
+    Loop bodies pass whole scan-stacked arrays into fusions that slice them
+    interiorly — counting full operand bytes would overcount by the layer
+    count. For each fusion parameter consumed ONLY by slicing ops, charge the
+    slice results instead of the full array; if the fusion root is a
+    dynamic-update-slice, charge the update size (the buffer aliases).
+    """
+    mc = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+    fc = comps.get(mc.group(1)) if mc else None
+    if fc is None:
+        return ins.result_bytes + _operand_bytes(ins, comp)
+
+    # map parameter index -> param instr name & bytes
+    params = {}
+    for fi in fc.instrs:
+        if fi.op == "parameter":
+            m = _PARAM_IDX_RE.match(fi.rest)
+            if m:
+                params[int(m.group(1))] = fi
+
+    def real_consumers(name, depth=0):
+        """Consumers, looking through bitcast/reshape/copy views."""
+        out = []
+        for fj in fc.instrs:
+            if name in fj.operands:
+                if fj.op in ("bitcast", "reshape", "copy") and depth < 3:
+                    out.extend(real_consumers(fj.name, depth + 1))
+                else:
+                    out.append(fj)
+        return out
+
+    read = 0.0
+    for idx, opnd in enumerate(ins.operands):
+        d = comp.table.get(opnd)
+        full = d.result_bytes if d is not None else 0
+        pi = params.get(idx)
+        if pi is None:
+            read += full
+            continue
+        consumers = real_consumers(pi.name)
+        if consumers and all(c.op in ("dynamic-slice", "gather", "slice",
+                                      "dynamic-update-slice")
+                             for c in consumers):
+            sliced = 0.0
+            for c in consumers:
+                if c.op == "dynamic-update-slice":
+                    # aliased buffer: written portion only
+                    if len(c.operands) >= 2:
+                        u = fc.table.get(c.operands[1])
+                        sliced += u.result_bytes if u is not None else 0
+                else:
+                    sliced += c.result_bytes
+            read += min(full, sliced) if sliced else full
+        else:
+            read += full
+
+    # root write size: DUS roots alias their big operand
+    write = ins.result_bytes
+    root = next((fi for fi in fc.instrs if fi.is_root),
+                fc.instrs[-1] if fc.instrs else None)
+    while root is not None and root.op in ("bitcast", "reshape", "copy") \
+            and root.operands:
+        root = fc.table.get(root.operands[0])
+    if root is not None and root.op == "dynamic-update-slice" \
+            and len(root.operands) >= 2:
+        u = fc.table.get(root.operands[1])
+        if u is not None:
+            write = u.result_bytes
+    return read + write
+
+
+SCOPES = ("flash_attention", "dense_attention", "mlstm_cell", "ssd_chunk",
+          "kv_cache_update", "moe_dispatch")
+_META_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _scope_of(rest: str) -> Optional[str]:
+    m = _META_RE.search(rest)
+    if not m:
+        return None
+    name = m.group(1)
+    for s in SCOPES:
+        if s in name:
+            return s
+    return None
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collectives: Dict[str, Dict] = dataclasses.field(
+        default_factory=lambda: {k: {"count": 0, "bytes": 0.0,
+                                     "ring_bytes": 0.0} for k in COLLECTIVES})
+    n_unknown_trip: int = 0
+    dot_calls: float = 0.0
+    bytes_by_scope: Dict[str, float] = dataclasses.field(default_factory=dict)
+    flops_by_scope: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # ring bytes of f32 collectives on dot-adjacent activations: CPU float-
+    # normalization upcasts bf16 dots (TPU moves these in bf16 — half)
+    f32_act_ring: float = 0.0
+
+    def _add_scoped(self, table: Dict[str, float], scope: Optional[str],
+                    val: float):
+        key = scope or "other"
+        table[key] = table.get(key, 0.0) + val
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(c["bytes"] for c in self.collectives.values())
+
+    @property
+    def ring_bytes(self) -> float:
+        return sum(c["ring_bytes"] for c in self.collectives.values())
+
+
+_GROUPS_ITOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_ITOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def _operand_bytes(instr: Instr, comp: Computation) -> float:
+    tot = 0.0
+    for o in instr.operands:
+        d = comp.table.get(o)
+        if d is not None:
+            tot += d.result_bytes
+    return tot
+
+
+def analyze_hlo(text: str, n_devices: int) -> HloCost:
+    comps = parse_module(text)
+    # ENTRY computation: the one whose name contains "main" — fall back to
+    # the one not referenced by any other computation
+    referenced = set()
+    for c in comps.values():
+        for i in c.instrs:
+            for m in _CALLED_RE.finditer(i.rest):
+                referenced.update(g for g in m.groups() if g)
+    entry = None
+    for name in comps:
+        if "main" in name:
+            entry = name
+            break
+    if entry is None:
+        cands = [n for n in comps if n not in referenced]
+        entry = cands[0] if cands else next(iter(comps))
+
+    cost = HloCost()
+    seen_stack = []
+
+    def visit(comp_name: str, mult: float, flops_only: bool):
+        comp = comps.get(comp_name)
+        if comp is None or comp_name in seen_stack:
+            return
+        seen_stack.append(comp_name)
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "while":
+                trip = _trip_count(ins, comps)
+                if trip == 1:
+                    cost.n_unknown_trip += 1
+                mb = re.search(r"body=%?([\w.\-]+)", ins.rest)
+                if mb:
+                    visit(mb.group(1), mult * trip, flops_only)
+                continue
+            if op in ("call", "conditional", "async-start"):
+                for m in _CALLED_RE.finditer(ins.rest):
+                    for g in m.groups():
+                        if g:
+                            visit(g, mult, flops_only)
+                continue
+            if op == "fusion":
+                # slice-aware surface bytes; interior visited for dot flops
+                # only (fused interior doesn't touch HBM)
+                mc = re.search(r"calls=%?([\w.\-]+)", ins.rest)
+                if not flops_only:
+                    b = mult * _fusion_bytes(ins, comp, comps)
+                    cost.bytes_accessed += b
+                    scope = _scope_of(ins.rest)
+                    if scope is None and mc and mc.group(1) in comps:
+                        # late-created wrapper fusions lose op_name — fall
+                        # back to any interior instruction's metadata
+                        for fi in comps[mc.group(1)].instrs:
+                            scope = _scope_of(fi.rest)
+                            if scope:
+                                break
+                    if scope is None:
+                        # inherit from a defining operand or a consumer
+                        # (float-normalization converts of big carried
+                        # buffers lose their metadata entirely)
+                        for o in ins.operands:
+                            d = comp.table.get(o)
+                            if d is not None:
+                                scope = _scope_of(d.rest)
+                                if scope:
+                                    break
+                    if scope is None:
+                        for other in comp.instrs:
+                            if ins.name in other.operands:
+                                scope = _scope_of(other.rest)
+                                if scope:
+                                    break
+                    cost._add_scoped(cost.bytes_by_scope, scope, b)
+                if mc:
+                    visit(mc.group(1), mult, True)
+                continue
+            if op == "dot":
+                f = mult * _dot_flops(ins, comp)
+                cost.flops += f
+                cost.dot_calls += mult
+                cost._add_scoped(cost.flops_by_scope, _scope_of(ins.rest), f)
+                if not flops_only:
+                    b = mult * (ins.result_bytes + _operand_bytes(ins, comp))
+                    cost.bytes_accessed += b
+                    cost._add_scoped(cost.bytes_by_scope,
+                                     _scope_of(ins.rest), b)
+                continue
+            if flops_only:
+                continue
+            if op in COLLECTIVES or any(
+                    op == k + "-start" for k in COLLECTIVES):
+                kind = op.replace("-start", "")
+                res = ins.result_bytes
+                n = max(2, _group_size(ins.rest, n_devices))
+                if kind == "all-gather":
+                    opb = res / n
+                    ring = (n - 1) * opb
+                elif kind == "reduce-scatter":
+                    opb = res * n
+                    ring = (n - 1) * res
+                elif kind == "all-reduce":
+                    opb = res
+                    ring = 2.0 * (n - 1) / n * opb
+                else:
+                    opb = res
+                    ring = (n - 1) / n * opb
+                c = cost.collectives[kind]
+                c["count"] += mult
+                c["bytes"] += mult * opb
+                c["ring_bytes"] += mult * ring
+                cost.bytes_accessed += mult * res
+                meta = _META_RE.search(ins.rest)
+                if "f32[" in ins.typestr and meta and (
+                        "dot_general" in meta.group(1)
+                        or "rematted" in meta.group(1)):
+                    cost.f32_act_ring += mult * ring
+                continue
+            if op in _FREE_OPS:
+                continue
+            if op in _SLICE_OPS:
+                upd = ins.result_bytes
+                if op == "dynamic-update-slice" and len(ins.operands) >= 2:
+                    u = comp.table.get(ins.operands[1])
+                    if u is not None:
+                        upd = u.result_bytes
+                b = mult * 2 * upd
+                cost.bytes_accessed += b
+                cost._add_scoped(cost.bytes_by_scope, _scope_of(ins.rest), b)
+                continue
+            b = mult * (ins.result_bytes + _operand_bytes(ins, comp))
+            cost.bytes_accessed += b
+            cost._add_scoped(cost.bytes_by_scope, _scope_of(ins.rest), b)
+        seen_stack.pop()
+
+    visit(entry, 1.0, False)
+    return cost

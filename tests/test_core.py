@@ -1,0 +1,253 @@
+"""Unit + property tests for the paper core: workflow DAG, cluster simulator,
+execution models, proportional autoscaler."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ClusterSim, ClusteredExecutor, HyperflowEngine,
+                        JobExecutor, WorkerPoolExecutor, Workflow, montage,
+                        proportional_replicas)
+from repro.core import experiment as ex
+
+
+# --------------------------------------------------------------- workflow --
+
+def test_workflow_dag_bookkeeping():
+    wf = Workflow()
+    a = wf.add("A", 1.0)
+    b = wf.add("B", 2.0, deps=(a,))
+    c = wf.add("C", 3.0, deps=(a, b))
+    assert [t.id for t in wf.roots()] == [a]
+    ready = wf.complete(a, 1.0)
+    assert [t.id for t in ready] == [b]
+    ready = wf.complete(b, 3.0)
+    assert [t.id for t in ready] == [c]
+    assert not wf.all_done()
+    wf.complete(c, 6.0)
+    assert wf.all_done()
+    assert wf.critical_path() == pytest.approx(6.0)
+    assert wf.total_work() == pytest.approx(6.0)
+
+
+def test_montage_structure():
+    wf = montage(n_tiles=100, seed=1)
+    types = wf.task_types()
+    assert types["mProject"] == 100
+    assert types["mDiffFit"] == int(100 * 2.9375)
+    assert types["mBackground"] == 100
+    for single in ("mConcatFit", "mBgModel", "mImgtbl", "mAdd", "mShrink",
+                   "mJPEG"):
+        assert types[single] == 1
+    # 16k-task canonical instance
+    wf16 = ex.make_workflow()
+    assert 15_500 <= len(wf16) <= 16_500
+
+
+# ------------------------------------------------------------- autoscaler --
+
+@given(
+    demand=st.dictionaries(st.sampled_from(list("abcdef")),
+                           st.integers(0, 10_000), min_size=1),
+    quota=st.floats(1.0, 500.0),
+)
+@settings(max_examples=200, deadline=None)
+def test_proportional_replicas_invariants(demand, quota):
+    cpu = {p: 1.0 for p in demand}
+    repl = proportional_replicas(demand, cpu, quota)
+    assert set(repl) == set(demand)
+    for p in demand:
+        assert repl[p] >= 0
+        assert repl[p] <= math.ceil(demand[p])          # never over-provision
+    total_demand = sum(demand.values())
+    if total_demand > quota:
+        assert sum(repl.values()) <= quota + 1e-9       # quota respected
+    # scale-to-zero
+    for p in demand:
+        if demand[p] == 0:
+            assert repl[p] == 0
+
+
+@given(
+    d1=st.integers(1, 10_000), d2=st.integers(1, 10_000),
+)
+@settings(max_examples=100, deadline=None)
+def test_proportional_replicas_proportionality(d1, d2):
+    quota = 64.0
+    repl = proportional_replicas({"a": d1, "b": d2}, {"a": 1.0, "b": 1.0},
+                                 quota)
+    if d1 + d2 > quota:
+        # allocation tracks the demand ratio within rounding of one replica
+        share_a = quota * d1 / (d1 + d2)
+        assert abs(repl["a"] - share_a) <= 1.0 + 1e-9
+        # quota fully used when both pools can absorb it
+        if repl["a"] < d1 and repl["b"] < d2:
+            assert sum(repl.values()) >= quota - 1.0
+
+
+def test_proportional_replicas_cpu_weights():
+    # allocation is proportional to core-demand (tasks x cpu): pool b's
+    # demand is 2x in core terms, so it receives 2x the cores
+    repl = proportional_replicas({"a": 100, "b": 100}, {"a": 1.0, "b": 2.0},
+                                 60.0)
+    assert repl["b"] * 2.0 == pytest.approx(2 * repl["a"] * 1.0, abs=4.0)
+    assert repl["a"] * 1.0 + repl["b"] * 2.0 <= 60.0 + 1e-9
+
+
+# ------------------------------------------------------------- simulator ---
+
+def _run(model: str, n_tiles=60, seed=3):
+    rep, wf, sim = ex.run_model(model, seed=seed, n_tiles=n_tiles)
+    return rep, wf, sim
+
+
+@pytest.mark.parametrize("model", ["job", "clustered", "worker_pools"])
+def test_no_task_starts_before_deps(model):
+    rep, wf, sim = _run(model)
+    assert wf.all_done()
+    for t in wf.tasks.values():
+        for d in t.deps:
+            dep = wf.tasks[d]
+            assert dep.finished_at <= t.started_at + 1e-9, \
+                f"{t.type} started before dep {dep.type}"
+
+
+@pytest.mark.parametrize("model", ["job", "clustered", "worker_pools"])
+def test_capacity_never_exceeded(model):
+    rep, wf, sim = _run(model)
+    cap = sim.capacity_cores()
+    assert all(v <= cap + 1e-9 for _, v in sim.busy_cores_trace)
+    for node in sim.nodes:
+        assert node.used_cpu <= node.cpu + 1e-9
+        assert node.used_cpu >= -1e-9
+
+
+@pytest.mark.parametrize("model", ["job", "clustered", "worker_pools"])
+def test_makespan_lower_bounds(model):
+    rep, wf, sim = _run(model)
+    assert rep.makespan >= wf.critical_path() - 1e-9
+    assert rep.makespan >= wf.total_work() / sim.capacity_cores() - 1e-9
+
+
+def test_model_ordering_and_pod_counts():
+    """The paper's qualitative result on a mid-size instance: pools beat
+    clustering beats jobs, and pools create far fewer pods."""
+    reps = {m: _run(m, n_tiles=400, seed=5)[0]
+            for m in ("job", "clustered", "worker_pools")}
+    assert reps["worker_pools"].makespan < reps["clustered"].makespan
+    assert reps["clustered"].makespan < reps["job"].makespan
+    # both mitigations create far fewer pods than one-pod-per-task
+    assert reps["worker_pools"].pods_created < reps["job"].pods_created / 3
+    assert reps["clustered"].pods_created < reps["job"].pods_created / 3
+    assert reps["worker_pools"].utilization > reps["job"].utilization
+
+
+def test_clustering_batches_bounded():
+    """No clustered pod may run more than `size` tasks."""
+    wf = ex.make_workflow(seed=3, n_tiles=60)
+    sim = ex.make_sim(seed=3)
+    execu = ClusteredExecutor(ex.CLUSTERING_RULES)
+    HyperflowEngine(wf, execu, sim).run()
+    # pods_created >= tasks / max_size
+    n = len(wf)
+    max_size = max(r["size"] for r in ex.CLUSTERING_RULES.values())
+    assert sim.pods_created >= n / max_size
+
+
+def test_worker_pools_scale_to_zero():
+    rep, wf, sim = _run("worker_pools")
+    # after shutdown no pool pods remain allocated
+    for node in sim.nodes:
+        assert node.used_cpu == pytest.approx(0.0, abs=1e-9)
+
+
+def test_deterministic_given_seed():
+    r1 = _run("worker_pools", n_tiles=80, seed=9)[0]
+    r2 = _run("worker_pools", n_tiles=80, seed=9)[0]
+    assert r1.makespan == r2.makespan
+    assert r1.pods_created == r2.pods_created
+
+
+# ----------------------------------------------------- paper reproduction --
+
+@pytest.mark.slow
+def test_paper_headline_numbers():
+    """C2/C3: clustered ≈1700 s, pools ≈1420 s, ≈15-20 % improvement."""
+    wp, _, _ = ex.run_model("worker_pools", seed=7)
+    cl, _, _ = ex.run_model("clustered", seed=7)
+    assert 1340 <= wp.makespan <= 1500, wp.makespan
+    assert 1600 <= cl.makespan <= 1820, cl.makespan
+    imp = 1 - wp.makespan / cl.makespan
+    assert 0.12 <= imp <= 0.25, imp
+
+
+# ------------------------------------------------- §5 future-work extras ---
+
+def test_vertical_autoscaler_rightsizes():
+    from repro.core.extensions import VerticalAutoscaler
+    vpa = VerticalAutoscaler(margin=0.2, min_samples=3)
+    assert vpa.recommend("t", 1.0) == 1.0           # no data yet
+    for _ in range(3):
+        vpa.observe("t", 0.5)
+    rec = vpa.recommend("t", 1.0)
+    assert rec == pytest.approx(0.6)                # 0.5 * 1.2
+    vpa.observe("t", 0.9)
+    assert vpa.recommend("t", 1.0) == pytest.approx(1.0)  # capped at current
+
+
+def test_vpa_pools_rightsize_and_pack_more():
+    """Paper §5 future work: right-sized requests pack more concurrent
+    workers per node at no makespan cost (mProject's 0.85 utilization
+    bounds the makespan win itself — recorded honestly in EXPERIMENTS)."""
+    from repro.core.extensions import VerticalWorkerPoolExecutor
+    wf1 = ex.make_workflow(seed=3, n_tiles=200)
+    wf2 = ex.make_workflow(seed=3, n_tiles=200)
+    sim1, sim2 = ex.make_sim(seed=3), ex.make_sim(seed=3)
+    plain = ex.make_executor("worker_pools")
+    vpa = VerticalWorkerPoolExecutor(pooled_types=ex.POOLED_TYPES)
+    r_plain = HyperflowEngine(wf1, plain, sim1).run()
+    r_vpa = HyperflowEngine(wf2, vpa, sim2).run()
+    assert all(t.done for t in wf2.tasks.values())
+    # requests right-sized toward true utilization (mDiffFit 0.45 -> ~0.52)
+    cpus = {p.type: p.cpu for p in vpa.pools.values()}
+    assert cpus["mDiffFit"] < 0.7
+    # never slower, and packs more concurrent tasks at peak
+    assert r_vpa.makespan <= r_plain.makespan * 1.02
+    peak_plain = max(v for _, v in sim1.running_tasks_trace)
+    peak_vpa = max(v for _, v in sim2.running_tasks_trace)
+    assert peak_vpa > peak_plain
+
+
+def test_federated_multicluster_executes_with_locality():
+    """Paper §5 future work: two-cloud federation — all tasks finish, most
+    run in their data-home cluster, stealing pays the transfer penalty."""
+    from repro.core.extensions import FederatedWorkerPoolExecutor
+    wf = ex.make_workflow(seed=5, n_tiles=120)
+    sim = ex.make_sim(seed=5)
+    n = len(sim.nodes)
+    fed = FederatedWorkerPoolExecutor(
+        clusters={"A": range(0, n // 2), "B": range(n // 2, n)},
+        pooled_types=None, transfer_penalty=5.0)
+    rep = HyperflowEngine(wf, fed, sim).run()
+    assert all(t.done for t in wf.tasks.values())
+    assert rep.makespan > 0
+    # locality honored: stealing happens but is not the norm
+    assert fed.stolen < len(wf) * 0.5
+
+
+def test_federated_cluster_isolation():
+    """Pods of cluster A never land on B's nodes."""
+    from repro.core.extensions import FederatedWorkerPoolExecutor
+    wf = ex.make_workflow(seed=5, n_tiles=60)
+    sim = ex.make_sim(seed=5)
+    n = len(sim.nodes)
+    a_nodes = set(range(0, n // 2))
+    fed = FederatedWorkerPoolExecutor(
+        clusters={"A": a_nodes, "B": set(range(n // 2, n))})
+    HyperflowEngine(wf, fed, sim).run()
+    for pod in sim.pods.values():
+        if pod.node is None:
+            continue
+        allowed = getattr(pod, "allowed_nodes", None)
+        if allowed is not None:
+            assert pod.node in allowed

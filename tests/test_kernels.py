@@ -1,0 +1,240 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracles,
+swept over shapes/dtypes (+ hypothesis property sweeps), plus the blocked
+XLA flash path vs the same oracle (fwd AND grads)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.models.attention import flash_attention as flash_xla
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.5).astype(dtype)
+
+
+def _qkv(seed, B, Sq, Skv, K, G, H, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (_rand(k1, (B, Sq, K, G, H), dtype),
+            _rand(k2, (B, Skv, K, H), dtype),
+            _rand(k3, (B, Skv, K, H), dtype))
+
+
+TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+# ------------------------------------------------------ flash attention ----
+
+@pytest.mark.parametrize("B,S,K,G,H", [
+    (1, 128, 1, 1, 32), (2, 256, 2, 2, 64), (1, 512, 2, 3, 128),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_fwd_vs_ref(B, S, K, G, H, causal):
+    q, k, v = _qkv(0, B, S, S, K, G, H)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)
+
+
+def test_flash_fwd_window():
+    q, k, v = _qkv(1, 2, 256, 256, 2, 1, 64)
+    out = ops.flash_attention(q, k, v, causal=True, window=64,
+                              block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)
+
+
+def test_flash_fwd_kv_valid():
+    q, k, v = _qkv(2, 1, 128, 256, 2, 2, 32)
+    out = ops.flash_attention(q, k, v, causal=False, kv_valid=100,
+                              block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=False, kv_valid=100)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)
+
+
+def test_flash_fwd_bf16():
+    q, k, v = _qkv(3, 1, 256, 256, 1, 2, 64, dtype=jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, causal=True, block_q=128, block_k=128)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    bq=st.sampled_from([32, 64, 128]),
+    bk=st.sampled_from([32, 64, 128]),
+    s_mult=st.integers(2, 4),
+    causal=st.booleans(),
+    g=st.integers(1, 3),
+)
+def test_flash_fwd_block_shape_sweep(bq, bk, s_mult, causal, g):
+    S = 128 * s_mult
+    q, k, v = _qkv(4, 1, S, S, 2, g, 32)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)
+
+
+# ----------------------------------------------- blocked XLA flash path ----
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 96)])
+def test_flash_xla_fwd_vs_ref(causal, window):
+    q, k, v = _qkv(5, 2, 256, 256, 2, 2, 32)
+    out = flash_xla(q, k, v, causal=causal, window=window,
+                    block_q=64, block_k=64)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)
+
+
+def test_flash_xla_grads_vs_ref():
+    q, k, v = _qkv(6, 1, 256, 256, 2, 2, 32)
+
+    def f_blocked(q, k, v):
+        return jnp.sum(flash_xla(q, k, v, causal=True,
+                                 block_q=64, block_k=64) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=True) ** 2)
+
+    g1 = jax.grad(f_blocked, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-2, atol=5e-2)
+
+
+def test_flash_xla_decode_kv_valid_per_batch():
+    q, k, v = _qkv(7, 3, 1, 256, 2, 2, 32)
+    kv_valid = jnp.array([10, 100, 256], jnp.int32)
+    out = flash_xla(q, k, v, causal=False, kv_valid=kv_valid,
+                    block_q=16, block_k=64)
+    for b in range(3):
+        want = ref.attention_ref(q[b:b + 1], k[b:b + 1], v[b:b + 1],
+                                 causal=False, kv_valid=int(kv_valid[b]))
+        np.testing.assert_allclose(np.asarray(out[b:b + 1]),
+                                   np.asarray(want), **TOL)
+
+
+# --------------------------------------------------------- flash decode ----
+
+@pytest.mark.parametrize("valid", [1, 63, 128, 500, 512])
+def test_flash_decode_vs_ref(valid):
+    q, k, v = _qkv(8, 2, 1, 512, 2, 4, 64)
+    out = ops.flash_decode(q, k, v, valid, block_k=128)
+    want = ref.decode_ref(q, k, v, valid)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **TOL)
+
+
+def test_flash_decode_matches_flash_attention():
+    q, k, v = _qkv(9, 1, 1, 256, 2, 2, 32)
+    a = ops.flash_decode(q, k, v, 200, block_k=64)
+    b = ops.flash_attention(q, k, v, causal=False, kv_valid=200,
+                            block_q=16, block_k=64)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), **TOL)
+
+
+# -------------------------------------------------------------- rmsnorm ----
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.sampled_from([64, 256, 512]),
+       d=st.sampled_from([128, 256, 768]),
+       dtype=st.sampled_from([jnp.float32, jnp.bfloat16]))
+def test_rmsnorm_vs_ref(rows, d, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = _rand(k1, (rows, d), dtype)
+    scale = _rand(k2, (d,), jnp.float32) + 1.0
+    out = ops.rmsnorm(x, scale, block_rows=64)
+    want = ref.rmsnorm_ref(x, scale)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_rmsnorm_residual_vs_ref():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = _rand(k1, (128, 256), jnp.float32)
+    r = _rand(k2, (128, 256), jnp.float32)
+    scale = _rand(k3, (256,), jnp.float32) + 1.0
+    y, new_r = ops.rmsnorm_residual(x, r, scale, block_rows=64)
+    want_y, want_r = ref.rmsnorm_residual_ref(x, r, scale)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want_y), **TOL)
+    np.testing.assert_allclose(np.asarray(new_r), np.asarray(want_r), **TOL)
+
+
+# ------------------------------------------------------------- ssd scan ----
+
+@pytest.mark.parametrize("S,chunk", [(64, 16), (128, 32), (256, 256)])
+def test_ssd_scan_vs_sequential_ref(S, chunk):
+    B, H, P, N = 2, 3, 16, 8
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = _rand(k1, (B, S, H, P), jnp.float32)
+    a = -jnp.abs(_rand(k2, (B, S, H), jnp.float32)) * 0.1
+    Bm = _rand(k3, (B, S, N), jnp.float32)
+    Cm = _rand(k4, (B, S, N), jnp.float32)
+    out = ops.ssd_scan(x, a, Bm, Cm, chunk=chunk)
+    want = ref.ssd_ref(x, a, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_ssd_scan_matches_model_chunked():
+    """The model's jnp chunked SSD and the Pallas kernel agree."""
+    from repro.models.ssm import ssd_chunked
+    B, S, H, P, N = 1, 128, 2, 16, 8
+    keys = jax.random.split(jax.random.PRNGKey(4), 4)
+    x = _rand(keys[0], (B, S, H, P), jnp.float32)
+    a = -jnp.abs(_rand(keys[1], (B, S, H), jnp.float32)) * 0.1
+    Bm = _rand(keys[2], (B, S, N), jnp.float32)
+    Cm = _rand(keys[3], (B, S, N), jnp.float32)
+    out = ops.ssd_scan(x, a, Bm, Cm, chunk=32)
+    want, _ = ssd_chunked(x, a, Bm, Cm, chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-2, atol=3e-2)
+
+
+# ------------------------------------------------- pallas flash backward ---
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 96)])
+def test_flash_pallas_grads_vs_ref(causal, window):
+    """Pallas fwd+bwd kernels vs the jnp oracle gradients."""
+    q, k, v = _qkv(10, 1, 256, 256, 2, 2, 32)
+
+    def f_pallas(q, k, v):
+        return jnp.sum(ops.flash_attention_diff(q, k, v, causal, window,
+                                                None, 64, 64) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=causal,
+                                         window=window) ** 2)
+
+    g1 = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(g1, g2, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-2, atol=5e-2, err_msg=name)
+
+
+def test_flash_pallas_grads_gqa_groups():
+    """GQA: dk/dv must sum over the folded G group rows correctly."""
+    q, k, v = _qkv(11, 2, 128, 128, 2, 3, 32)
+
+    def f_pallas(q, k, v):
+        return jnp.sum(ops.flash_attention_diff(q, k, v, True, 0,
+                                                None, 64, 64) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(ref.attention_ref(q, k, v, causal=True) ** 2)
+
+    g1 = jax.grad(f_pallas, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=5e-2, atol=5e-2)
